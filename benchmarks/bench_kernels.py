@@ -1,0 +1,72 @@
+"""E11 — Pallas kernel sweep: max abs error vs the jnp oracle across
+shapes/dtypes (interpret mode on CPU; Mosaic on a real TPU), plus the
+VMEM working-set accounting per BlockSpec choice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention, gqa_decode_attention, seg_combine
+from repro.kernels.ref import (
+    decode_attention_ref,
+    flash_attention_ref,
+    seg_combine_ref,
+)
+from .common import table, write_md
+
+
+def _vmem_kib(bq, bk, hd, dtype_bytes=4):
+    # q + k + v tiles + fp32 scratch (m, l lanes + acc)
+    tiles = (bq * hd + 2 * bk * hd) * dtype_bytes
+    scratch = (2 * bq * 128 + bq * hd) * 4
+    return (tiles + scratch) / 1024
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    cases = [
+        (1, 4, 2, 256, 256, 64, jnp.float32),
+        (2, 2, 2, 128, 384, 128, jnp.bfloat16),
+        (1, 8, 1, 200, 333, 80, jnp.float32),
+    ]
+    for B, H, KV, Sq, Sk, hd, dt in cases:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, Sq, hd), dt)
+        k = jax.random.normal(ks[1], (B, KV, Sk, hd), dt)
+        v = jax.random.normal(ks[2], (B, KV, Sk, hd), dt)
+        out = flash_attention(q, k, v, True, None, 50.0, 0)
+        ref = flash_attention_ref(q, k, v, causal=True, logit_cap=50.0)
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+        rows.append([f"flash {B}x{H}x{Sq}x{Sk}x{hd} {dt.__name__}", err,
+                     f"{_vmem_kib(128, 128, max(hd, 128)):.0f} KiB"])
+
+    for B, H, KV, S, hd in [(2, 8, 2, 512, 64), (1, 4, 4, 300, 128)]:
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (B, H, 1, hd))
+        kc = jax.random.normal(ks[1], (B, KV, S, hd))
+        vc = jax.random.normal(ks[2], (B, KV, S, hd))
+        sp = jnp.arange(S, dtype=jnp.int32)
+        pos = jnp.asarray(S - 1, jnp.int32)
+        out = gqa_decode_attention(q, kc, vc, sp, pos)
+        ref = decode_attention_ref(
+            q.reshape(B, KV, H // KV, hd), kc, vc, sp, pos
+        ).reshape(B, H, 1, hd)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append([f"decode {B}x{H}xS{S}x{hd}", err, "-"])
+
+    for N, D, P in [(1024, 256, 16), (777, 130, 7)]:
+        ks = jax.random.split(jax.random.PRNGKey(2), 2)
+        vals = jax.random.normal(ks[0], (N, D))
+        pid = jax.random.randint(ks[1], (N,), 0, P, jnp.int32)
+        out = seg_combine(vals, pid, P)
+        ref = seg_combine_ref(vals, pid, P)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append([f"seg_combine {N}x{D}->P{P}", err, "-"])
+
+    lines = ["Kernel vs jnp-oracle max abs error (interpret mode):", ""]
+    lines += table(["case", "max abs err", "VMEM tile set"], rows)
+    write_md("kernels.md", "E11: Pallas kernel sweeps", lines)
+    return lines

@@ -1,0 +1,43 @@
+"""E7 — the Starfish loop on live engine executions: profile once, fit
+Table-3 cost factors, predict configurations never run, compare against
+measured wall time.  The paper's core claim, validated end-to-end.
+"""
+
+from __future__ import annotations
+
+from repro.core.hadoop.params import HadoopParams, MiB
+from repro.mapreduce import JOBS
+from repro.mapreduce.profiler import prediction_error
+from .common import table, write_md
+
+
+def run(quick: bool = False) -> list[str]:
+    n = 40_000 if quick else 100_000
+    lines = []
+    for jname in ("sort", "wordcount"):
+        job = JOBS[jname]
+        base = HadoopParams(
+            pNumMappers=4, pNumReducers=4, pUseCombine=job.use_combine,
+            pSortMB=1.0, pSplitSize=n / 4 * job.pair_width, pTaskMem=8 * MiB,
+        )
+        fit_hps = [
+            base.replace(pSortMB=0.5),
+            base.replace(pSortMB=2.0, pNumReducers=2),
+            base.replace(pSortFactor=4, pNumReducers=8),
+        ]
+        test_hps = [
+            base.replace(pSortMB=1.5, pNumReducers=16),
+            base.replace(pSortMB=0.75, pSortFactor=5),
+            base.replace(pSortMB=4.0, pNumReducers=2, pSortFactor=20),
+        ]
+        out = prediction_error(job, fit_hps, test_hps, n)
+        rows = [
+            [f"test {i}", r["measured_s"], r["predicted_s"], r["rel_err"]]
+            for i, r in enumerate(out["rows"])
+        ]
+        lines += [f"## {jname} (n={n} pairs, fit on 3 configs)", ""]
+        lines += table(["config", "measured s", "predicted s", "rel err"], rows)
+        lines += [f"", f"mean rel err = {out['mean_rel_err']:.3f}, "
+                  f"max = {out['max_rel_err']:.3f}", ""]
+    write_md("mr_fit.md", "E7: fitted-model prediction error", lines)
+    return lines

@@ -1,0 +1,71 @@
+"""E8 — assemble the 40-cell roofline table from dry-run artifacts.
+
+For every (arch x shape): the three terms (seconds, per step), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs (useful ratio), and the
+roofline fraction = ideal-time / dominant-term where ideal-time uses the
+appropriate ceiling (compute ideal for train/prefill; HBM weight+KV read
+ideal for decode).  Multi-pod cells prove the pod axis shards; their
+bytes/device and terms are reported alongside.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+
+from repro.configs import SHAPES, get_config
+from repro.core.roofline import HW
+from repro.core.tpu_model import TpuParams, _param_count
+from .common import table, write_md
+
+
+def ideal_seconds(c: dict) -> float:
+    """Best achievable step time on this mesh for this cell's workload."""
+    cfg = get_config(c["arch"])
+    shape = SHAPES[c["shape"]]
+    chips = c["chips"]
+    comp = c["roofline"]["model_flops"] / (chips * HW["peak_flops"])
+    if shape.kind != "decode":
+        return comp
+    # decode: reading the (sharded) weights + KV once bounds the step
+    pbytes = _param_count(cfg) * 2 / chips          # bf16 serving weights
+    kv = 0.0
+    if cfg.n_kv_heads:
+        kv = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+              * shape.seq_len * shape.global_batch * 2) / chips
+    return max(comp, (pbytes + kv) / HW["hbm_bw"])
+
+
+def run(quick: bool = False) -> list[str]:
+    rows_single, rows_multi = [], []
+    for f in sorted(glob.glob("artifacts/dryrun/*.json")):
+        c = json.load(open(f))
+        if "arch" not in c:   # e.g. mapreduce_pipeline.json (own section)
+            continue
+        tag = f"{c['arch']}/{c['shape']}"
+        if c.get("opt", "baseline") != "baseline":
+            tag += f" **[opt:{c['opt']}]**"
+        if not c.get("status", "").startswith("ok"):
+            row = [tag, c["status"], "-", "-", "-", "-", "-", "-"]
+            (rows_single if c["mesh"] == "16x16" else rows_multi).append(row)
+            continue
+        r = c["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = ideal_seconds(c) / dom if dom else 0.0
+        # peak_memory is the binding HBM metric; XLA:CPU's temp_size sums
+        # allocations without TPU memory-pressure scheduling (pessimistic)
+        mem = c.get("memory", {}).get("peak_memory_in_bytes", 0) / 2**30
+        row = [
+            tag, r["bound"], r["compute_s"], r["memory_s"], r["collective_s"],
+            round(r["useful_ratio"], 3), f"{100*frac:.1f}%", f"{mem:.1f}GiB",
+        ]
+        (rows_single if c["mesh"] == "16x16" else rows_multi).append(row)
+
+    hdr = ["cell", "bound", "compute s", "memory s", "collective s",
+           "useful", "roofline frac", "bytes/dev"]
+    lines = ["## single-pod 16x16 (256 chips) — the roofline table", ""]
+    lines += table(hdr, rows_single)
+    lines += ["", "## multi-pod 2x16x16 (512 chips) — pod axis shards", ""]
+    lines += table(hdr, rows_multi)
+    write_md("roofline.md", "E8: 40-cell roofline", lines)
+    return lines

@@ -1,0 +1,36 @@
+"""E10-adjacent — serving throughput at smoke scale: prefill latency and
+decode tok/s for a gemma2-family model (ring caches + softcap), XLA vs
+Pallas attention path."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import init_params
+from repro.models import attention
+from repro.runtime.serve_loop import Server
+from .common import table, write_md
+
+
+def run(quick: bool = False) -> list[str]:
+    cfg = get_config("gemma2-9b").smoke()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(2, cfg.vocab_size, (4, 16))
+    rows = []
+    for impl in ("xla", "pallas") if not quick else ("xla",):
+        attention.set_attention_impl(impl)
+        try:
+            server = Server(cfg, params, max_len=64)
+            out = server.throughput_batch(prompts, new_tokens=8)
+            rows.append([impl, out["prefill_s"], out["decode_s"],
+                         out["tok_per_s"]])
+        finally:
+            attention.set_attention_impl("xla")
+    lines = ["gemma2-smoke serving (CPU; Pallas runs in interpret mode, so",
+             "its CPU time is NOT indicative — included for path coverage):", ""]
+    lines += table(["attention", "prefill s", "decode s", "tok/s"], rows)
+    write_md("serving.md", "Serving throughput (smoke)", lines)
+    return lines

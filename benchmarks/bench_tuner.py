@@ -1,0 +1,47 @@
+"""E6 — configuration tuning: does the search find the true optimum, and
+how many model evaluations does each strategy need?
+
+Ground truth = exhaustive grid (the what-if engine makes it cheap); the
+regret column is (found - optimum)/optimum.
+"""
+
+from __future__ import annotations
+
+from repro.core.hadoop.params import CostFactors, HadoopParams, MiB, ProfileStats
+from repro.core.tuner import coordinate_descent, grid_search, random_search
+from .common import table, timer, write_md
+
+SPACE = {
+    "pSortMB": [16, 32, 64, 100, 128, 256, 512],
+    "pSortFactor": [3, 5, 10, 20, 50, 100],
+    "pNumReducers": [2, 4, 8, 16, 32, 64, 128],
+    "pShuffleInBufPerc": [0.3, 0.5, 0.7, 0.9],
+    "pUseCombine": [0.0, 1.0],
+}
+
+
+def run(quick: bool = False) -> list[str]:
+    hp = HadoopParams(pNumNodes=16, pNumMappers=128, pUseCombine=True,
+                      pSplitSize=256 * MiB)
+    st = ProfileStats(sMapSizeSel=1.2, sMapPairsSel=2.0,
+                      sCombineSizeSel=0.35, sCombinePairsSel=0.35)
+    cf = CostFactors()
+
+    with timer() as t_ex:
+        exact = grid_search(hp, st, cf, SPACE)
+    rows = [["exhaustive", exact.evaluations, exact.best_cost, 0.0, t_ex.s]]
+    for name, fn in [
+        ("coordinate descent", lambda: coordinate_descent(hp, st, cf, SPACE)),
+        ("random-512", lambda: random_search(hp, st, cf, SPACE, samples=512)),
+        ("random-64", lambda: random_search(hp, st, cf, SPACE, samples=64)),
+    ]:
+        with timer() as t:
+            res = fn()
+        regret = (res.best_cost - exact.best_cost) / exact.best_cost
+        rows.append([name, res.evaluations, res.best_cost, regret, t.s])
+
+    lines = [f"space size = {exact.evaluations} configs; "
+             f"optimum {exact.best_cost:.3f}s at {exact.best_assignment}", ""]
+    lines += table(["strategy", "evals", "best cost s", "regret", "wall s"], rows)
+    write_md("tuner.md", "E6: configuration tuner", lines)
+    return lines

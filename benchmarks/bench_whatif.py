@@ -1,0 +1,56 @@
+"""E5 — what-if engine throughput: closed-form model evaluations per second
+via the vmapped/jitted JAX model vs the pure-Python oracle.
+
+The paper's tuning use case needs ~10^4-10^6 model evaluations per search;
+this benchmark shows the vectorized formulation sustains that in one
+process (the reason core/hadoop/model.py exists next to ref.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
+from repro.core.hadoop.ref import job_model
+from repro.core.whatif import evaluate_grid
+from .common import table, timer, write_md
+
+
+def run(quick: bool = False) -> list[str]:
+    hp, st, cf = HadoopParams(pUseCombine=True), ProfileStats(), CostFactors()
+    sizes = [256, 4096, 65536] if not quick else [256, 4096]
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        overrides = {
+            "pSortMB": rng.choice([32, 64, 100, 128, 256], n).astype(float),
+            "pSortFactor": rng.choice([5, 10, 20, 50], n).astype(float),
+            "pNumReducers": rng.choice([4, 8, 16, 32, 64], n).astype(float),
+        }
+        evaluate_grid(hp, st, cf, {k: v[:8] for k, v in overrides.items()})  # warm
+        with timer() as t:
+            res = evaluate_grid(hp, st, cf, overrides)
+        batched_rate = n / t.s
+
+        n_py = min(n, 2048)
+        with timer() as t2:
+            for i in range(n_py):
+                job_model(
+                    hp.replace(
+                        pSortMB=float(overrides["pSortMB"][i]),
+                        pSortFactor=int(overrides["pSortFactor"][i]),
+                        pNumReducers=int(overrides["pNumReducers"][i]),
+                    ), st, cf,
+                )
+        py_rate = n_py / t2.s
+        rows.append([n, t.s, batched_rate, py_rate, batched_rate / py_rate])
+        best_i, best_cost, assign = res.best()
+
+    lines = ["vmapped jnp model vs pure-Python oracle:", ""]
+    lines += table(
+        ["grid size", "batched s", "configs/s (jax)", "configs/s (python)",
+         "speedup"], rows,
+    )
+    lines += ["", f"sample best: cost={best_cost:.3f}s at {assign}"]
+    write_md("whatif_throughput.md", "E5: what-if engine throughput", lines)
+    return lines

@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import os
+import time
+
+ART = "artifacts/bench"
+
+
+def write_md(name: str, title: str, lines: list[str]) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, name)
+    with open(path, "w") as f:
+        f.write(f"# {title}\n\n")
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+def table(headers: list[str], rows: list[list]) -> list[str]:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(
+            f"{v:.4g}" if isinstance(v, float) else str(v) for v in r
+        ) + " |")
+    return out
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,60 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
+
+One module per paper aspect (DESIGN.md §9 experiment index):
+
+  E4  bench_sim_vs_analytic  analytic job cost vs task-scheduler simulation
+  E5  bench_whatif           what-if engine throughput (vmap vs python)
+  E6  bench_tuner            tuner vs exhaustive optimum
+  E7  bench_mr_fit           fitted cost factors -> prediction error
+  E8  bench_roofline         40-cell dry-run roofline table
+  E9  bench_tpu_model        TPU analytical model vs compiled dry-run
+  E11 bench_kernels          Pallas kernels vs jnp oracles
+
+Markdown reports land in artifacts/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = [
+    ("E4 sim_vs_analytic", "benchmarks.bench_sim_vs_analytic"),
+    ("E5 whatif", "benchmarks.bench_whatif"),
+    ("E6 tuner", "benchmarks.bench_tuner"),
+    ("E7 mr_fit", "benchmarks.bench_mr_fit"),
+    ("E8 roofline", "benchmarks.bench_roofline"),
+    ("E9 tpu_model", "benchmarks.bench_tpu_model"),
+    ("E11 kernels", "benchmarks.bench_kernels"),
+    ("serving", "benchmarks.bench_serving"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+
+    failures = 0
+    for label, modname in MODULES:
+        if args.only and args.only not in modname and args.only not in label:
+            continue
+        t0 = time.time()
+        print(f"\n===== {label} ({modname}) =====", flush=True)
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            lines = mod.run(quick=args.quick)
+            print("\n".join(lines))
+            print(f"[done in {time.time()-t0:.1f}s]")
+        except Exception:
+            failures += 1
+            print(f"[FAILED]\n{traceback.format_exc()[-3000:]}")
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+    print("\nAll benchmarks complete; reports in artifacts/bench/")
+
+
+if __name__ == "__main__":
+    main()

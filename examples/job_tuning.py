@@ -1,0 +1,90 @@
+"""The full Starfish loop on live executions — profile, fit, tune, verify.
+
+1. PROFILE  a wordcount job once on the MapReduce-on-JAX engine.
+2. FIT      the paper's Table-3 cost factors from measured phase timings.
+3. TUNE     (io.sort.mb, io.sort.factor, numReducers, combiner) with the
+            vmapped what-if engine + coordinate descent — pure model
+            evaluations, no job runs (the paper's whole point).
+4. VERIFY   by actually running the recommended configuration: it must
+            beat the default configuration's measured wall time.
+5. SIMULATE the tuned job on a virtual cluster with stragglers + failures
+            + speculative execution (paper §5 way (i)).
+
+Run:  PYTHONPATH=src python examples/job_tuning.py
+"""
+
+import numpy as np
+
+from repro.core.hadoop.params import HadoopParams, MiB
+from repro.core.hadoop.simulator import SimConfig, simulate_job
+from repro.core.tuner import coordinate_descent, grid_search
+from repro.mapreduce import JOBS, make_input
+from repro.mapreduce.profiler import fit_cost_factors, predict, run_measured
+
+job = JOBS["wordcount"]
+N = 120_000
+default_hp = HadoopParams(
+    pNumMappers=4, pNumReducers=2, pUseCombine=True,
+    pSortMB=0.25, pSortFactor=3,                      # deliberately poor
+    pSplitSize=N / 4 * job.pair_width, pTaskMem=8 * MiB,
+)
+
+# ---- 1+2: profile + fit from three probe runs ----
+probes = [
+    default_hp,
+    default_hp.replace(pSortMB=1.0),
+    default_hp.replace(pNumReducers=8, pSortFactor=8),
+]
+runs = [run_measured(job, hp, N, seed=1) for hp in probes]
+costs = fit_cost_factors(runs)
+stats = runs[0].stats
+print("== fitted cost factors (paper Table 3, from live phase timings) ==")
+for f in ("cHdfsReadCost", "cMapCPUCost", "cSortCPUCost", "cMergeCPUCost",
+          "cNetworkCost", "cReduceCPUCost"):
+    print(f"  {f:18s} = {getattr(costs, f):.3e} s/unit")
+print(f"  measured sMapPairsSel={stats.sMapPairsSel:.2f} "
+      f"sCombinePairsSel={stats.sCombinePairsSel:.3f}")
+
+# ---- 3: tune on the model only ----
+space = {
+    "pSortMB": [0.25, 0.5, 1.0, 2.0, 4.0],
+    "pSortFactor": [3, 5, 10, 20],
+    "pNumReducers": [1, 2, 4, 8, 16],
+    "pUseCombine": [0.0, 1.0],
+}
+tuned = coordinate_descent(default_hp, stats, costs, space)
+exhaustive = grid_search(default_hp, stats, costs, space)
+hp_tuned = tuned.apply(default_hp)
+print("\n== tuner (model evaluations only) ==")
+print(f"  coordinate descent: {tuned.best_assignment} "
+      f"cost={tuned.best_cost:.3f}s ({tuned.evaluations} evals)")
+print(f"  exhaustive optimum: cost={exhaustive.best_cost:.3f}s "
+      f"({exhaustive.evaluations} evals) -> descent within "
+      f"{100 * tuned.best_cost / max(exhaustive.best_cost, 1e-9) - 100:.1f}%")
+
+# ---- 4: verify on the engine ----
+before = run_measured(job, default_hp, N, seed=2)
+after = run_measured(job, hp_tuned, N, seed=2)
+print("\n== verification (real engine runs) ==")
+print(f"  default config : measured {before.wall_s:.3f}s "
+      f"(predicted {predict(default_hp, stats, costs):.3f}s)")
+print(f"  tuned config   : measured {after.wall_s:.3f}s "
+      f"(predicted {predict(hp_tuned, stats, costs):.3f}s)")
+speedup = before.wall_s / max(after.wall_s, 1e-9)
+print(f"  speedup {speedup:.2f}x  {'OK' if speedup > 1.0 else 'NO GAIN'}")
+
+# ---- 5: virtual-cluster simulation (paper §5 way (i)) ----
+print("\n== task-scheduler simulation: stragglers + failure + speculation ==")
+sim_hp = hp_tuned.replace(pNumNodes=8, pNumMappers=64, pNumReducers=16)
+for label, sc in [
+    ("clean cluster", SimConfig(seed=7)),
+    ("10% stragglers, no speculation",
+     SimConfig(seed=7, straggler_prob=0.1, speculative_execution=False)),
+    ("10% stragglers + speculation",
+     SimConfig(seed=7, straggler_prob=0.1, speculative_execution=True)),
+    ("node failure at t=0.3s",
+     SimConfig(seed=7, node_failures=((0.3, 3),))),
+]:
+    r = simulate_job(sim_hp, stats, costs, sc)
+    print(f"  {label:34s} makespan={r.makespan:7.2f}s "
+          f"spec={r.num_speculative_launched} reruns={r.num_failure_reruns}")

@@ -1,0 +1,67 @@
+"""Quickstart: the paper's models in five minutes.
+
+1. Predict a MapReduce job's cost with the closed-form models (Eqs. 2-98).
+2. Cross-check the dataflow against a REAL execution of the same job on
+   the MapReduce-on-JAX engine.
+3. Ask a what-if question (the paper's headline use case) and tune a knob.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.hadoop import ref
+from repro.core.hadoop.params import CostFactors, HadoopParams, MiB, ProfileStats
+from repro.mapreduce import JOBS, MapReduceEngine, make_input
+from repro.mapreduce.profiler import profile_job
+
+# ---------------------------------------------------------------- 1. model
+hp = HadoopParams(
+    pNumNodes=16, pNumMappers=64, pNumReducers=16,
+    pSortMB=100.0, pSortFactor=10, pUseCombine=True,
+    pSplitSize=128 * MiB, pTaskMem=200 * MiB,
+)
+stats = ProfileStats(
+    sInputPairWidth=100.0, sMapSizeSel=0.8, sMapPairsSel=1.0,
+    sCombineSizeSel=0.4, sCombinePairsSel=0.4,
+    sReduceSizeSel=0.5, sReducePairsSel=0.1,
+)
+jm = ref.job_model(hp, stats, CostFactors())
+print("== closed-form prediction (paper Eqs. 2-98) ==")
+print(f"  map task : numSpills={jm.map.numSpills} "
+      f"mergePasses={jm.map.numMergePasses} io={jm.map.ioCost:.2f}s "
+      f"cpu={jm.map.cpuCost:.2f}s")
+print(f"  reduce   : shuffle={jm.reduce.totalShuffleSize/MiB:.1f}MiB "
+      f"io={jm.reduce.ioCost:.2f}s cpu={jm.reduce.cpuCost:.2f}s")
+print(f"  job      : total={jm.totalCost:.2f}s "
+      f"(io={jm.ioJobCost:.2f} cpu={jm.cpuJobCost:.2f} net={jm.netCost:.2f})")
+
+# ------------------------------------------------------------- 2. validate
+job = JOBS["wordcount"]
+n = 40_000
+hp_small = HadoopParams(
+    pNumMappers=2, pNumReducers=4, pUseCombine=True,
+    pSortMB=1.0, pSplitSize=n / 2 * job.pair_width, pTaskMem=8 * MiB,
+)
+keys, values = make_input(job, n)
+jc = MapReduceEngine(hp_small, job).run_job(keys, values)
+measured = profile_job(jc, job, hp_small)
+m = ref.map_task_model(hp_small, measured, CostFactors())
+mc = jc.maps[0]
+print("\n== engine vs model (live wordcount run) ==")
+print(f"  numSpills        engine={mc.numSpills:<6d} model={m.numSpills}")
+print(f"  spillBufferPairs engine={mc.spillBufferPairs:<6d} model={int(m.spillBufferPairs)}")
+print(f"  mergePasses      engine={mc.numMergePasses:<6d} model={m.numMergePasses}")
+print(f"  combine selectivity measured from run: {measured.sCombinePairsSel:.3f}")
+
+# -------------------------------------------------------------- 3. what-if
+print("\n== what-if: shrink io.sort.mb 100 -> 10 (more spills/merges) ==")
+for sort_mb in (100.0, 10.0):
+    jm = ref.job_model(hp.replace(pSortMB=sort_mb), stats, CostFactors())
+    print(f"  io.sort.mb={sort_mb:>5.0f}MB -> numSpills={jm.map.numSpills:>3d} "
+          f"total={jm.totalCost:.2f}s")
+
+print("\n== tune pNumReducers (grid) ==")
+best = min(
+    (ref.job_model(hp.replace(pNumReducers=r), stats, CostFactors()).totalCost, r)
+    for r in (4, 8, 16, 32, 64)
+)
+print(f"  best pNumReducers={best[1]} (predicted {best[0]:.2f}s)")

@@ -1,0 +1,80 @@
+"""The paper's tuning loop applied to TPU execution configs — and checked
+against the measured §Perf hillclimb.
+
+Starfish uses the analytical job model to rank Hadoop configurations
+without running them.  Here the TPU step model (`core/tpu_model.py`, the
+Table-1/2/3 adaptation) ranks (dp, tp, n_micro) mesh factorizations for
+each architecture; the ranking is then compared with what the compiled
+dry-run MEASURED on the hillclimbed cells — the model must put the
+measured winner above the measured loser, or the whole methodology is
+decorative.
+
+Run:  PYTHONPATH=src python examples/tpu_tuning.py
+"""
+
+import glob
+import json
+
+from repro.configs import SHAPES, get_config
+from repro.core.tpu_model import TpuParams, step_model
+
+SPACE = [
+    (16, 16), (32, 8), (64, 4), (128, 2), (256, 1),
+]
+MICRO = [2, 4, 8, 16]
+
+
+def tune(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rows = []
+    for dp, tp in SPACE:
+        if shape.global_batch % dp:
+            continue                      # unshardable batch (cf. §Perf gemma2-prefill control)
+        for nm in MICRO:
+            if (shape.global_batch // dp) % nm and nm != 1:
+                continue
+            m = step_model(cfg, shape, TpuParams(
+                dp=dp, tp=tp, n_micro=nm,
+                ep=tp if cfg.n_experts and cfg.n_experts % tp == 0 else 1,
+            ))
+            rows.append(((dp, tp, nm), m.overlap_s, m.bound))
+    rows.sort(key=lambda r: r[1])
+    return rows
+
+
+def measured(arch: str, shape: str):
+    out = {}
+    for f in glob.glob(f"artifacts/dryrun/{arch}__{shape}__single*.json"):
+        c = json.load(open(f))
+        if c.get("status") != "ok":
+            continue
+        r = c["roofline"]
+        out[c.get("opt", "baseline")] = max(
+            r["compute_s"], r["memory_s"], r["collective_s"]
+        )
+    return out
+
+
+for arch, shape in [
+    ("starcoder2-7b", "train_4k"),
+    ("gemma2-9b", "train_4k"),
+    ("granite-3-8b", "train_4k"),
+]:
+    rows = tune(arch, shape)
+    print(f"\n== {arch}/{shape}: model ranking (top 5 of {len(rows)}) ==")
+    for (dp, tp, nm), t, bound in rows[:5]:
+        print(f"  dp={dp:<3d} tp={tp:<2d} micro={nm:<2d} -> {t:7.2f}s ({bound})")
+    base = next((t for (d, tp, _), t, _ in rows if (d, tp) == (16, 16)), None)
+    best = rows[0]
+    print(f"  model: best {best[0]} vs (16,16) baseline {base:.2f}s "
+          f"-> predicted {base/best[1]:.1f}x")
+    m = measured(arch, shape)
+    if "baseline" in m:
+        opt = {k: v for k, v in m.items() if k != "baseline"}
+        if opt:
+            k, v = min(opt.items(), key=lambda kv: kv[1])
+            agree = (best[0][:2] != (16, 16)) == (v < m["baseline"])
+            print(f"  measured (compiled dry-run): baseline {m['baseline']:.2f}s, "
+                  f"best preset '{k}' {v:.2f}s ({m['baseline']/v:.1f}x) "
+                  f"-> ranking {'AGREES' if agree else 'DISAGREES'}")

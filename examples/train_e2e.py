@@ -1,0 +1,69 @@
+"""End-to-end training driver: a ~13M-parameter granite-family model for a
+few hundred steps on CPU, with checkpointing, an injected mid-run crash,
+and bit-exact auto-resume.
+
+This is the full production path (sharded step, grad accumulation, atomic
+async checkpoints, stateless data) at example scale; on a pod the same
+Trainer runs the full configs on a (dp, tp) mesh.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py          (~3-5 min CPU)
+      PYTHONPATH=src python examples/train_e2e.py --fast   (~1 min, 120 steps)
+"""
+
+import argparse
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.optim import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--fast", action="store_true")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+args = ap.parse_args()
+
+STEPS = 120 if args.fast else 300
+cfg = get_config("granite-3-8b").replace(
+    name="granite-13m",
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+    d_ff=1024, vocab_size=2048, dtype="float32",
+)
+n_params = sum(
+    int(np.prod(s.shape)) for s in jax.tree.leaves(
+        jax.eval_shape(lambda k: __import__("repro.models.lm", fromlist=["lm"]).init(k, cfg),
+                       jax.random.PRNGKey(0)))
+)
+print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  steps={STEPS}")
+
+shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+tcfg = TrainerConfig(
+    global_batch=8, seq_len=256, n_microbatches=2,
+    ckpt_dir=args.ckpt_dir, ckpt_every=40, async_ckpt=True, log_every=20,
+    opt=AdamWConfig(peak_lr=1e-3, warmup_steps=30, total_steps=STEPS),
+    fail_at_step=STEPS // 2,              # injected crash mid-run
+)
+
+print(f"\n-- phase 1: train until the injected crash at step {STEPS//2} --")
+try:
+    Trainer(cfg, tcfg).run(STEPS, resume=False)
+except RuntimeError as e:
+    print(f"   crashed as planned: {e}")
+
+print("-- phase 2: auto-resume from newest valid checkpoint --")
+tcfg2 = TrainerConfig(**{**tcfg.__dict__, "fail_at_step": None})
+trainer = Trainer(cfg, tcfg2)
+out = trainer.run(STEPS, resume=True)
+trainer.save_log("artifacts/train_e2e_log.jsonl")
+
+log = out["log"]
+first, last = log[0], log[-1]
+print(f"\nloss: step {first['step']}: {first['loss']:.4f}  ->  "
+      f"step {last['step']}: {last['loss']:.4f}")
+drop = first["loss"] - last["loss"]
+print(f"loss drop: {drop:.4f} ({'learning OK' if drop > 0.3 else 'WEAK'})  "
+      f"straggler events: {len(trainer.straggler_events)}")
+assert drop > 0.1, "model failed to learn the synthetic structure"
+print("artifacts/train_e2e_log.jsonl written; checkpoints in", args.ckpt_dir)

@@ -1,0 +1,45 @@
+"""Registry of assigned architectures and input shapes.
+
+``get_config(name)`` resolves an ``--arch`` id to its exact public config;
+``ARCHS`` lists all ten assigned architectures.  Shape cells and
+ShapeDtypeStruct input builders live in :mod:`repro.configs.shapes`.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+from .shapes import SHAPES, ShapeSpec, applicable, input_specs, skip_reason
+
+__all__ = [
+    "ARCHS",
+    "get_config",
+    "SHAPES",
+    "ShapeSpec",
+    "applicable",
+    "input_specs",
+    "skip_reason",
+]
+
+ARCHS: dict[str, str] = {
+    "gemma2-9b": "gemma2_9b",
+    "starcoder2-7b": "starcoder2_7b",
+    "granite-3-8b": "granite_3_8b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "internvl2-26b": "internvl2_26b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mamba2-130m": "mamba2_130m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("_", "-")
+    if key not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[key]}")
+    return mod.CONFIG

@@ -1,0 +1,121 @@
+"""Assigned input shapes and per-(arch x shape) input specifications.
+
+The four assigned shape cells (LM shapes are seq_len x global_batch)::
+
+    train_4k     seq  4 096   batch 256   training        -> train_step
+    prefill_32k  seq 32 768   batch  32   inference       -> prefill
+    decode_32k   seq 32 768   batch 128   decode w/ cache -> serve_step
+    long_500k    seq 524 288  batch   1   long decode     -> serve_step
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of that cell — weak-type-correct, shardable, and
+allocation-free, which is what the multi-pod dry-run lowers against.
+
+Applicability rules (see DESIGN.md §Shape-skips):
+* ``long_500k`` only for architectures with bounded decode state
+  (``cfg.supports_long_context``).
+* VLM/audio frontends are stubs: specs include precomputed patch/frame
+  embeddings instead of raw pixels/waveforms.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_lib
+from repro.models import lm as lm_lib
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "applicable", "input_specs", "skip_reason"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# VLM: number of patch-embedding positions inside the sequence budget.
+_VLM_PATCHES = 1024
+# enc-dec: target length as a fraction of the (source) sequence budget.
+_ENCDEC_TGT_FRAC = 4
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """None if the (arch x shape) cell runs; otherwise why it is skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return "skip(full-attn): unbounded full-attention KV at 500k"
+    return None
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    return skip_reason(cfg, shape) is None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct pytree for every input of this cell's step fn."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+
+    if cfg.is_encdec:
+        T = max(S // _ENCDEC_TGT_FRAC, 16)
+        if shape.kind == "train":
+            return {
+                "src_embeds": _sds((B, S, cfg.d_model), act),
+                "inputs": _sds((B, T), i32),
+                "targets": _sds((B, T), i32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "src_embeds": _sds((B, S, cfg.d_model), act),
+                "inputs": _sds((B, 256), i32),
+            }
+        # decode: self cache sized T, cross cache sized S
+        caches = jax.eval_shape(
+            lambda: encdec_lib.cache_spec_encdec(cfg, B, T, S, act)
+        )
+        return {
+            "token": _sds((B, 1), i32),
+            "caches": caches,
+            "pos": _sds((), i32),
+        }
+
+    if cfg.frontend == "vision":
+        n_img = min(_VLM_PATCHES, S // 4)
+        if shape.kind == "train":
+            return {
+                "extra_embeds": _sds((B, n_img, cfg.d_model), act),
+                "inputs": _sds((B, S - n_img), i32),
+                "targets": _sds((B, S - n_img), i32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "extra_embeds": _sds((B, n_img, cfg.d_model), act),
+                "inputs": _sds((B, S - n_img), i32),
+            }
+        caches = jax.eval_shape(lambda: lm_lib.cache_spec(cfg, B, S, act))
+        return {"token": _sds((B, 1), i32), "caches": caches, "pos": _sds((), i32)}
+
+    if shape.kind == "train":
+        return {"inputs": _sds((B, S), i32), "targets": _sds((B, S), i32)}
+    if shape.kind == "prefill":
+        return {"inputs": _sds((B, S), i32)}
+    caches = jax.eval_shape(lambda: lm_lib.cache_spec(cfg, B, S, act))
+    return {"token": _sds((B, 1), i32), "caches": caches, "pos": _sds((), i32)}

@@ -1,0 +1,10 @@
+"""Core of the reproduction: the paper's analytical performance models.
+
+* :mod:`repro.core.hadoop`   — faithful Hadoop MapReduce models (Eqs. 1-98)
+* :mod:`repro.core.whatif`   — vectorized what-if engine (vmap over configs)
+* :mod:`repro.core.tuner`    — configuration-space optimizers
+* :mod:`repro.core.tpu_model` — the methodology adapted to TPU step costs
+* :mod:`repro.core.roofline` — roofline-term extraction from dry-run artifacts
+"""
+
+from . import hadoop  # noqa: F401

@@ -1,0 +1,58 @@
+"""Faithful implementation of the paper's Hadoop performance models."""
+
+from .merge_math import (
+    MergePlan,
+    calc_num_spills_final_merge,
+    calc_num_spills_first_pass,
+    calc_num_spills_interm_merge,
+    merge_plan,
+    num_merge_passes,
+    simulate_merge,
+)
+from .model import CONFIG_KEYS, job_model_jnp, pack_config
+from .params import (
+    CostFactors,
+    HadoopParams,
+    MiB,
+    ProfileStats,
+    apply_initializations,
+)
+from .ref import (
+    JobModel,
+    MapTaskModel,
+    ReduceTaskModel,
+    job_model,
+    map_task_model,
+    network_model,
+    reduce_task_model,
+)
+from .simulator import SimConfig, SimResult, TaskRecord, simulate_job
+
+__all__ = [
+    "MiB",
+    "HadoopParams",
+    "ProfileStats",
+    "CostFactors",
+    "apply_initializations",
+    "MergePlan",
+    "calc_num_spills_first_pass",
+    "calc_num_spills_interm_merge",
+    "calc_num_spills_final_merge",
+    "num_merge_passes",
+    "merge_plan",
+    "simulate_merge",
+    "MapTaskModel",
+    "ReduceTaskModel",
+    "JobModel",
+    "map_task_model",
+    "reduce_task_model",
+    "network_model",
+    "job_model",
+    "pack_config",
+    "job_model_jnp",
+    "CONFIG_KEYS",
+    "SimConfig",
+    "SimResult",
+    "TaskRecord",
+    "simulate_job",
+]

@@ -1,0 +1,3 @@
+from .pipeline import TokenPipeline, PipelineConfig
+
+__all__ = ["TokenPipeline", "PipelineConfig"]

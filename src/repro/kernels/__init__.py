@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the substrate's compute hot-spots.
+
+Three kernels, each with the pallas_call (``<name>.py``), the jit'd public
+wrapper (``ops.py``) and a pure-jnp oracle (``ref.py``):
+
+  flash_attention  — blocked prefill/training attention (online softmax)
+  decode_attention — single-token GQA attention over (ring) KV caches
+  seg_combine      — MXU segmented combine (Hadoop collect/partition/combine
+                     analogue feeding the all_to_all shuffle)
+
+On CPU (this container) they run in interpret mode; on TPU via Mosaic.
+"""
+
+from .ops import flash_attention, gqa_decode_attention, seg_combine, use_interpret
+
+__all__ = ["flash_attention", "gqa_decode_attention", "seg_combine", "use_interpret"]

@@ -1,0 +1,142 @@
+"""Single-token GQA decode attention Pallas kernel (TPU target).
+
+Serving hot-spot for ``decode_32k`` / ``long_500k``: one new query token
+attends over a long KV cache.  The cache streams HBM→VMEM in
+(block_k x head_dim) tiles; all G query heads of a KV group are processed
+together so the score matmul is (G x hd)@(hd x bk) — MXU work instead of a
+VPU dot per head.  Online softmax state (m, l, acc) lives in VMEM scratch
+across the innermost cache-block grid dimension.
+
+Ring caches (sliding-window layers) are handled via ``slot_pos``: an int32
+array giving the token position stored in each cache slot (-1 = never
+written).  Masking is ``slot_pos ∈ (pos - window, pos]`` — identical to the
+XLA reference in ``models/attention.py``.
+
+  grid = (batch, kv_heads, num_cache_blocks)            # cache innermost
+  q tile    (1, 1, G, hd)      VMEM
+  k,v tile  (1, 1, block_k, hd) VMEM
+  slot_pos  (1, block_k)        VMEM  int32
+  pos       (1, 1)              SMEM  int32 (scalar, dynamic)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel", "decode_attention_pallas"]
+
+_NEG = -1e30
+_LANES = 128
+
+
+def decode_attention_kernel(
+    pos_ref, q_ref, k_ref, v_ref, slot_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    window: int | None,
+    logit_cap: float | None,
+    num_k_blocks: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+    slot_pos = slot_ref[0]                              # (bk,) int32
+    pos = pos_ref[0, 0]                                 # scalar int32
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                           # (G, bk)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        ok &= slot_pos > pos - window
+    s = jnp.where(ok[None, :], s, _NEG)
+
+    m_prev = m_scr[:, 0]                                # (G,)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])                     # (G, bk)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[:, 0] * corr + p.sum(axis=-1)
+
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # (G, hd)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,               # (B, KV, G, hd) — hd % 128 == 0 (pre-padded)
+    k_cache: jax.Array,         # (B, KV, S, hd)
+    v_cache: jax.Array,         # (B, KV, S, hd)
+    slot_pos: jax.Array,        # (S,) int32 — position held by each slot
+    pos: jax.Array,             # scalar int32 — current decode position
+    *,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    sm_scale: float | None = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KV, G, hd = q.shape
+    S = k_cache.shape[2]
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+
+    kernel = functools.partial(
+        decode_attention_kernel,
+        scale=hd ** -0.5 if sm_scale is None else sm_scale,
+        window=window,
+        logit_cap=logit_cap,
+        num_k_blocks=nk,
+    )
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (1, 1))
+    slot2d = slot_pos.astype(jnp.int32).reshape(1, S)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, n, j: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, n, j: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, n, j: (b, n, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, n, j: (b, n, j, 0)),
+            pl.BlockSpec((1, block_k), lambda b, n, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, n, j: (b, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention",
+    )(pos_arr, q, k_cache, v_cache, slot2d)

@@ -1,0 +1,177 @@
+"""Blocked flash attention Pallas kernel (TPU target).
+
+The Hadoop-paper analogue: the map-side Spill/Merge pipeline streams data
+through a bounded sort buffer instead of materializing everything; here the
+(Sq x Sk) score matrix is never materialized in HBM — K/V stream HBM→VMEM in
+(block_k x head_dim) tiles and an online softmax keeps O(block_q) state, the
+TPU-native rethink of the same bounded-buffer streaming insight.
+
+Layout / tiling
+---------------
+  grid = (batch, q_heads, num_q_blocks, num_k_blocks)   # k innermost
+  q tile   (1, 1, block_q, head_dim)  VMEM
+  k,v tile (1, 1, block_k, head_dim)  VMEM, kv head = q_head // group_size
+  scratch  m,l: (block_q, 128) fp32 (lane-replicated), acc: (block_q, hd) fp32
+
+The kv-block dimension is innermost and declared "arbitrary" so the scratch
+accumulators persist across it; output is written on the final kv block.
+Fully-masked (causal / sliding-window) kv blocks skip their matmuls via
+``pl.when``.  MXU alignment: callers (ops.py) pad head_dim to a multiple of
+128 and seq lens to block multiples; block_q/block_k default to 128.
+
+Supports: causal and bidirectional attention, sliding-window (ring) masks,
+Gemma-2 logit soft-capping, GQA (grouped KV heads), q position offsets
+(continuation prefill), and a valid-KV-length mask for padded inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+_NEG = -1e30
+_LANES = 128
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    logit_cap: float | None,
+    q_offset: int,
+    k_len: int,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + iq * block_q
+    k_start = ik * block_k
+
+    # Block-level mask pruning (positions are global token indices).
+    live = k_start < k_len
+    if causal:
+        live &= k_start <= q_start + block_q - 1
+    if window is not None:
+        # k_pos > q_pos - window for some pair in the block
+        live &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                       # (bq, bk)
+        if logit_cap is not None:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < k_len
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, _NEG)
+
+        m_prev = m_scr[:, 0]                            # (bq,)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])                 # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                  # (bq,)
+        l_new = l_scr[:, 0] * corr + p.sum(axis=-1)
+
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                               # (bq, hd)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,               # (B, H, Sq, hd) — hd % 128 == 0 (pre-padded)
+    k: jax.Array,               # (B, KV, Sk, hd)
+    v: jax.Array,               # (B, KV, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_offset: int = 0,
+    k_len: int | None = None,
+    sm_scale: float | None = None,   # softmax scale; ops.py passes true_hd**-0.5
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call wrapper; shape padding/validation lives in ops.py."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    if k_len is None:
+        k_len = Sk
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        scale=hd ** -0.5 if sm_scale is None else sm_scale,
+        causal=causal,
+        window=window,
+        logit_cap=logit_cap,
+        q_offset=q_offset,
+        k_len=k_len,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+    )
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

@@ -1,0 +1,160 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Responsibilities kept OUT of the kernels themselves:
+  * shape hygiene — pad head_dim to a lane multiple (128), seq lens to block
+    multiples, un-pad outputs (zero-padded K columns are masked via k_len,
+    zero-padded head dims contribute 0 to dots, so results are exact);
+  * interpret-mode dispatch — on CPU (this container) kernels run with
+    ``interpret=True``; on a real TPU backend they compile via Mosaic;
+  * gradients — ``flash_attention`` carries a custom_vjp whose backward is
+    the O(block)-memory jnp reference (recompute-based flash backward), so
+    the Pallas forward is usable inside ``train_step``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+from .ref import flash_attention_ref
+from .seg_combine import seg_combine_pallas
+
+__all__ = ["flash_attention", "gqa_decode_attention", "seg_combine", "use_interpret"]
+
+_LANE = 128
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode: required on CPU, off on real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ------------------------------------------------------------ flash attn
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def flash_attention(
+    q, k, v,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    """Pallas flash attention with padding hygiene.  Shapes as attention.py:
+    q (B,H,Sq,hd), k/v (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    return _flash_fwd_impl(
+        q, k, v, causal, window, logit_cap, q_offset, block_q, block_k
+    )
+
+
+def _flash_fwd_impl(q, k, v, causal, window, logit_cap, q_offset, block_q, block_k):
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    sm_scale = hd ** -0.5
+
+    qp = _pad_to(_pad_to(q, 3, _LANE), 2, block_q)
+    kp = _pad_to(_pad_to(k, 3, _LANE), 2, block_k)
+    vp = _pad_to(_pad_to(v, 3, _LANE), 2, block_k)
+
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        causal=causal, window=window, logit_cap=logit_cap,
+        q_offset=q_offset, k_len=Sk, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k,
+        interpret=use_interpret(),
+    )
+    return out[:, :, :Sq, :hd]
+
+
+def _flash_fwd(q, k, v, causal, window, logit_cap, q_offset, block_q, block_k):
+    out = _flash_fwd_impl(
+        q, k, v, causal, window, logit_cap, q_offset, block_q, block_k
+    )
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, logit_cap, q_offset, block_q, block_k, res, g):
+    q, k, v = res
+    # Recompute-based backward through the jnp reference (exact same math).
+    f = functools.partial(
+        flash_attention_ref,
+        causal=causal, window=window, logit_cap=logit_cap, q_offset=q_offset,
+    )
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ------------------------------------------------------------ decode attn
+
+def gqa_decode_attention(
+    q,                          # (B, H, 1, hd) — attention.py layout
+    k_cache, v_cache,           # (B, KV, S, hd)
+    slot_pos,                   # (S,) int32
+    pos,                        # scalar int32
+    *,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    block_k: int = 256,
+):
+    """Pallas decode attention; pads cache length + head_dim, un-pads out.
+    Padded slots get slot_pos=-1 so the kernel masks them."""
+    B, H, _, hd = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    sm_scale = hd ** -0.5
+    block_k = min(block_k, max(_LANE, 1 << (S - 1).bit_length()))
+
+    qg = q.reshape(B, KV, G, hd)
+    qp = _pad_to(qg, 3, _LANE)
+    kp = _pad_to(_pad_to(k_cache, 3, _LANE), 2, block_k)
+    vp = _pad_to(_pad_to(v_cache, 3, _LANE), 2, block_k)
+    sp = jnp.pad(slot_pos, (0, (-S) % block_k), constant_values=-1)
+
+    out = decode_attention_pallas(
+        qp, kp, vp, sp, pos,
+        window=window, logit_cap=logit_cap, sm_scale=sm_scale,
+        block_k=block_k, interpret=use_interpret(),
+    )
+    return out[..., :hd].reshape(B, H, 1, hd)
+
+
+# ------------------------------------------------------------ seg combine
+
+def seg_combine(
+    values,                     # (N, D)
+    part_ids,                   # (N,) int32; negative = dropped
+    num_parts: int,
+    *,
+    block_n: int = 512,
+    block_d: int = 256,
+):
+    """Per-partition sums (P, D) fp32 — MXU one-hot formulation."""
+    N, D = values.shape
+    block_n = min(block_n, max(8, 1 << (N - 1).bit_length()))
+    block_d = min(block_d, max(_LANE, 1 << (D - 1).bit_length()))
+    vp = _pad_to(_pad_to(values, 0, block_n), 1, block_d)
+    pp = jnp.pad(part_ids, (0, (-N) % block_n), constant_values=-1)
+    out = seg_combine_pallas(
+        vp, pp, num_parts,
+        block_n=block_n, block_d=block_d, interpret=use_interpret(),
+    )
+    return out[:, :D]

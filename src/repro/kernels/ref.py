@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function materializes the full intermediate (score matrix / one-hot
+matrix) in fp32 — O(Sq*Sk) memory, fine at test scale — and is the ground
+truth the kernels are swept against in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "decode_attention_ref", "seg_combine_ref"]
+
+_NEG = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,               # (B, H, Sq, hd)
+    k: jax.Array,               # (B, KV, Sk, hd)
+    v: jax.Array,               # (B, KV, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_offset: int = 0,
+    k_len: int | None = None,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5 if sm_scale is None else sm_scale
+    qg = q.reshape(B, KV, G, Sq, hd)
+
+    s = jnp.einsum("bngqh,bnch->bngqc", qg, k).astype(jnp.float32) * scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if k_len is not None:
+        ok &= k_pos[None, :] < k_len
+    s = jnp.where(ok, s, _NEG)
+
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngqc,bnch->bngqh", w.astype(q.dtype), v)
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,               # (B, KV, G, hd)
+    k_cache: jax.Array,         # (B, KV, S, hd)
+    v_cache: jax.Array,         # (B, KV, S, hd)
+    slot_pos: jax.Array,        # (S,) int32
+    pos: jax.Array,             # scalar int32
+    *,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if sm_scale is None else sm_scale
+    s = jnp.einsum("bngh,bnch->bngc", q, k_cache).astype(jnp.float32) * scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        ok &= slot_pos > pos - window
+    s = jnp.where(ok[None, None, None, :], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngc,bnch->bngh", w.astype(q.dtype), v_cache)
+    return out.astype(q.dtype)
+
+
+def seg_combine_ref(
+    values: jax.Array,          # (N, D)
+    part_ids: jax.Array,        # (N,) int32; negative = dropped
+    num_parts: int,
+) -> jax.Array:
+    """(P, D) fp32 per-partition sums via scatter-add."""
+    vals = values.astype(jnp.float32)
+    vals = jnp.where((part_ids >= 0)[:, None], vals, 0.0)
+    idx = jnp.clip(part_ids, 0, num_parts - 1)
+    return jnp.zeros((num_parts, values.shape[1]), jnp.float32).at[idx].add(vals)

@@ -1,0 +1,85 @@
+"""Segmented combine Pallas kernel — the TPU analogue of Hadoop's
+Collect/Partition/Combine pipeline.
+
+In the paper's map task, output pairs are partitioned by reducer, sorted,
+and (optionally) combined before being spilled; the combiner shrinks data by
+``sCombineSizeSel`` *before* it crosses the network.  On a TPU mesh the
+shuffle is an ``all_to_all``; the pre-shuffle combine is a segmented
+reduction keyed by destination partition.  A scatter-add does this on the
+VPU, serially per element; instead we rethink it for the MXU: a one-hot
+(P x block_n) partition matrix times the (block_n x D) value block is a
+dense matmul that performs block_n fused adds per pass — this kernel is
+that formulation.
+
+  grid = (num_d_blocks, num_n_blocks)                  # n innermost
+  values tile (block_n, block_d)  VMEM
+  part ids    (1, block_n)        VMEM int32
+  out tile    (P, block_d)        VMEM — same block for every n step,
+                                   accumulated across the inner dimension.
+
+Counts (pairs-per-partition, the paper's ``spillFilePairs`` measurement)
+come from the same matmul with an all-ones value column, exposed by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["seg_combine_kernel", "seg_combine_pallas"]
+
+
+def seg_combine_kernel(v_ref, p_ref, o_ref, *, num_parts: int, block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = v_ref[...].astype(jnp.float32)               # (bn, bd)
+    pid = p_ref[0]                                      # (bn,) int32
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (num_parts, block_n), 0)
+    onehot = (rows == pid[None, :]).astype(jnp.float32)  # (P, bn)
+    o_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def seg_combine_pallas(
+    values: jax.Array,          # (N, D) — pair payloads
+    part_ids: jax.Array,        # (N,) int32 in [0, P); negative = dropped
+    num_parts: int,
+    *,
+    block_n: int = 512,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-partition combined sums, shape (P, D) fp32."""
+    N, D = values.shape
+    assert N % block_n == 0 and D % block_d == 0, (N, D, block_n, block_d)
+
+    kernel = functools.partial(
+        seg_combine_kernel, num_parts=num_parts, block_n=block_n
+    )
+    pid2d = part_ids.astype(jnp.int32).reshape(1, N)
+    return pl.pallas_call(
+        kernel,
+        grid=(D // block_d, N // block_n),
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j: (j, i)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((num_parts, block_d), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((num_parts, D), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="seg_combine",
+    )(values, pid2d)

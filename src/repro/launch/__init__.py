@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, sharding rules, dry-run, train/serve CLIs.
+
+NOTE: ``repro.launch.dryrun`` force-sets XLA_FLAGS on import; never import
+it from tests or benchmarks.  Everything else here is side-effect free.
+"""

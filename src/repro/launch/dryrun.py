@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+# against the production meshes and extract roofline artifacts.
+#
+# The two lines above MUST stay the first statements in this file: JAX locks
+# the device count at first initialization, and the dry-run needs 512
+# placeholder host devices to build the 2x16x16 production mesh.  Tests and
+# benchmarks never import this module, so they see the single real CPU.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+#       --shape train_4k --mesh both --out artifacts/dryrun
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+
+import argparse
+import functools
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, skip_reason
+from repro.core.roofline import collective_bytes, hlo_totals, model_flops, roofline_terms
+from repro.launch import sharding as shd
+from repro.models import act_sharding
+from repro.models.opt_flags import OptFlags, clear_flags, set_flags
+from repro.launch.mesh import make_production_mesh
+
+# §Perf presets: named OptFlags bundles used by the hillclimb log
+# (EXPERIMENTS.md §Perf).  "baseline" is the paper-faithful configuration.
+OPT_PRESETS: dict[str, OptFlags] = {
+    "baseline": OptFlags(),
+    "moe-gather": OptFlags(moe_impl="gather"),
+    "dp64-tp4": OptFlags(mesh_factor=(64, 4)),
+    "dp32-tp8": OptFlags(mesh_factor=(32, 8)),
+    "sharded-loss": OptFlags(sharded_loss=True),
+    "moe-gather+dp64": OptFlags(moe_impl="gather", mesh_factor=(64, 4)),
+    "moe-gather+loss": OptFlags(moe_impl="gather", sharded_loss=True),
+    "dp64+loss": OptFlags(mesh_factor=(64, 4), sharded_loss=True),
+    "moe-gather+dp64+loss": OptFlags(
+        moe_impl="gather", mesh_factor=(64, 4), sharded_loss=True
+    ),
+    "dp32+loss": OptFlags(mesh_factor=(32, 8), sharded_loss=True),
+    "flash": OptFlags(flash_bwd=True),
+    "moe-gather+flash": OptFlags(moe_impl="gather", flash_bwd=True),
+    "micro32": OptFlags(n_micro_override=32),
+    "moe-shardmap": OptFlags(moe_impl="shardmap"),
+    "moe-shardmap+flash": OptFlags(moe_impl="shardmap", flash_bwd=True),
+    "inplace-cache": OptFlags(cache_update="inplace"),
+    "inplace-cache+moe": OptFlags(cache_update="inplace", moe_impl="shardmap"),
+    # suggested by the calibrated analytical model (examples/tpu_tuning.py)
+    "dp128+flash": OptFlags(mesh_factor=(128, 2), flash_bwd=True),
+    "moe-shardmap+dp64+flash": OptFlags(
+        moe_impl="shardmap", mesh_factor=(64, 4), flash_bwd=True
+    ),
+    "moe-shardmap+dp32+flash": OptFlags(
+        moe_impl="shardmap", mesh_factor=(32, 8), flash_bwd=True
+    ),
+    "einsum+micro32+flash": OptFlags(n_micro_override=32, flash_bwd=True),
+    "moe-gather+micro32+flash": OptFlags(
+        moe_impl="gather", n_micro_override=32, flash_bwd=True
+    ),
+    "dp64+flash": OptFlags(mesh_factor=(64, 4), flash_bwd=True),
+    "moe-gather+dp64+flash": OptFlags(
+        moe_impl="gather", mesh_factor=(64, 4), flash_bwd=True
+    ),
+    "dp64+flash+loss": OptFlags(
+        mesh_factor=(64, 4), flash_bwd=True, sharded_loss=True
+    ),
+}
+from repro.launch.steps import (
+    init_params,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    pick_microbatches,
+)
+from repro.optim import AdamWConfig, adamw_init
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend specific
+        return {"error": repr(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_per_device_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+        )
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items() if isinstance(v, (int, float))}
+
+
+def _bf16_params(shape_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32
+        else s,
+        shape_tree,
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    hlo_path: str | None = None,
+    opt: str = "baseline",
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    flags = OPT_PRESETS[opt]
+    set_flags(flags)
+    cell = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": 512 if multi_pod else 256,
+        "opt": opt,
+    }
+
+    reason = skip_reason(cfg, shape)
+    if reason:
+        cell["status"] = reason
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod, factor=flags.mesh_factor)
+    specs = input_specs(cfg, shape)
+    b_named = shd.named(mesh, shd.input_pspecs(cfg, shape, specs, mesh))
+    act_sharding.set_policy(shd.activation_policy(cfg, shape, mesh))
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            params_shape = jax.eval_shape(
+                functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0)
+            )
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            p_named = shd.named(mesh, shd.param_pspecs(cfg, params_shape, mesh))
+            o_named = shd.named(mesh, shd.opt_pspecs(cfg, opt_shape, mesh))
+            dp = mesh.shape["data"] * (2 if multi_pod else 1)
+            n_micro = flags.n_micro_override or pick_microbatches(
+                shape.global_batch, shape.seq_len, dp
+            )
+            cell["n_microbatches"] = n_micro
+            step = make_train_step(cfg, AdamWConfig(), n_micro)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_named, o_named, b_named),
+                out_shardings=(p_named, o_named, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, specs)
+        else:
+            params_shape = _bf16_params(
+                jax.eval_shape(
+                    functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0)
+                )
+            )
+            p_named = shd.named(mesh, shd.param_pspecs(cfg, params_shape, mesh))
+            if shape.kind == "prefill":
+                step = make_prefill_step(cfg, max_len=shape.seq_len)
+            else:
+                step = make_decode_step(cfg)
+            out_shape = jax.eval_shape(step, params_shape, specs)
+            out_named = shd.named(
+                mesh, shd.output_pspecs(cfg, shape, out_shape, mesh)
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_named, b_named),
+                out_shardings=out_named,
+                donate_argnums=(1,) if shape.kind == "decode" else (),
+            )
+            lowered = jitted.lower(params_shape, specs)
+
+        cell["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        cell["compile_s"] = round(time.time() - t1, 2)
+
+    act_sharding.clear_policy()
+    clear_flags()
+    cell["memory"] = _mem_dict(compiled)
+    cost = _cost_dict(compiled)
+    cell["cost"] = {
+        k: cost.get(k) for k in ("flops", "bytes accessed", "transcendentals")
+        if k in cost
+    }
+    hlo = compiled.as_text()
+    if hlo_path:
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    coll = collective_bytes(hlo)
+    parsed = hlo_totals(hlo)
+    cell["collectives"] = {
+        "total_bytes": coll.total_bytes,
+        "count": coll.count,
+        "by_kind": coll.by_kind,
+    }
+    cell["parsed"] = parsed
+    mf = model_flops(cfg, shape)
+    terms = roofline_terms(cost, coll, cell["chips"], mf, parsed)
+    cell["roofline"] = {
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "bound": terms.bound,
+        "model_flops": mf,
+        "hlo_flops_per_chip": terms.flops,
+        "hlo_flops_global": terms.flops * cell["chips"],
+        "hbm_bytes_per_chip": terms.hbm_bytes,
+        "coll_bytes_per_chip": terms.coll_bytes,
+        "useful_ratio": terms.useful_ratio,
+    }
+    cell["status"] = "ok"
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="every cell, both meshes")
+    ap.add_argument("--opt", default="baseline", choices=sorted(OPT_PRESETS))
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if (args.all or args.arch == "all") else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape == "all") else [args.shape]
+    meshes = (
+        [False, True] if (args.all or args.mesh == "both")
+        else [args.mesh == "multi"]
+    )
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+                if args.opt != "baseline":
+                    tag += f"__opt-{args.opt}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status", "").startswith(("ok", "skip")):
+                        print(f"[cached] {tag}: {prev['status']}")
+                        continue
+                try:
+                    cell = run_cell(
+                        arch, shape_name, multi,
+                        hlo_path=os.path.join(args.out, tag + ".hlo.gz"),
+                        opt=args.opt,
+                    )
+                except Exception as e:
+                    act_sharding.clear_policy()
+                    clear_flags()
+                    cell = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "status": f"FAIL: {e!r}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(cell, f, indent=1)
+                rf = cell.get("roofline", {})
+                print(
+                    f"[{cell['status'][:60]}] {tag} "
+                    f"compile={cell.get('compile_s', '-')}s "
+                    f"bound={rf.get('bound', '-')} "
+                    f"terms=({rf.get('compute_s', 0):.2e},"
+                    f"{rf.get('memory_s', 0):.2e},{rf.get('collective_s', 0):.2e})s",
+                    flush=True,
+                )
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (not a module-level constant) so importing this module
+never touches JAX device state — critical because the dry-run forces 512
+placeholder host devices while tests/benches must see the single real CPU.
+
+Mesh layouts:
+
+* single-pod:  (16, 16)      axes ("data", "model")          = 256 chips
+* multi-pod:   (2, 16, 16)   axes ("pod", "data", "model")   = 512 chips
+
+Axis roles (see DESIGN.md §6): "pod" = cross-pod data parallelism (DCN),
+"data" = in-pod data parallelism + FSDP parameter sharding + sequence
+sharding for long-context cells, "model" = tensor/expert parallelism (ICI).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "mesh_devices"]
+
+
+def mesh_devices(n: int):
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (see launch/dryrun.py)"
+        )
+    return np.array(devs[:n])
+
+
+def make_production_mesh(
+    *, multi_pod: bool = False, factor: tuple[int, int] | None = None
+) -> jax.sharding.Mesh:
+    """Production mesh.  ``factor=(dp, tp)`` refactors the SAME 256-chip
+    pod grid into a different logical (data, model) split — a §Perf knob
+    (e.g. starcoder2's 36 heads need tp ∈ {4, 12}; dp=64/tp=4 also cuts TP
+    collective bytes 4x).  Device order is unchanged; only the logical view
+    differs.  Default (16, 16)."""
+    dp, tp = factor or (16, 16)
+    assert dp * tp == 256, (dp, tp)
+    shape = (2, dp, tp) if multi_pod else (dp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(mesh_devices(n).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over the real host devices (tests / local runs)."""
+    n = data * model
+    return jax.sharding.Mesh(mesh_devices(n).reshape(data, model), ("data", "model"))

@@ -1,0 +1,282 @@
+"""GSPMD sharding rules: DP / TP (Megatron) / EP / SP / FSDP in one rule set.
+
+Axis assignment (mesh axes from ``launch.mesh``):
+
+* ``pod``   — cross-pod data parallelism only (slow DCN links; parameters
+  are replicated across pods, gradients all-reduce over it).
+* ``data``  — in-pod data parallelism for activations **and** FSDP/ZeRO-3
+  sharding for parameters + optimizer state (weights are all-gathered per
+  scanned layer group at use; required to fit 26B-param optimizer state).
+  For ``long_500k`` (batch=1) it is re-purposed as a sequence axis over the
+  KV caches (split-KV decode).
+* ``model`` — tensor parallelism (attention heads / FFN hidden / vocab),
+  expert parallelism (MoE expert dim), and recurrent-width parallelism.
+
+Rules are name+shape based over parameter pytrees, so the same function
+covers every architecture, the optimizer state (which mirrors parameters),
+and the KV/recurrent caches.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "param_pspecs",
+    "opt_pspecs",
+    "input_pspecs",
+    "output_pspecs",
+    "named",
+    "batch_axes",
+]
+
+REPL = P()
+
+
+def _names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+    return out
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def batch_axes(B: int, mesh: Mesh):
+    """Longest (pod, data) prefix whose size divides the global batch."""
+    cands = [("pod", "data"), ("data",), ()]
+    for c in cands:
+        if all(a in mesh.axis_names for a in c):
+            size = math.prod(_axis_size(mesh, a) for a in c)
+            if size and B % size == 0:
+                return c if len(c) != 1 else c[0]
+    return None
+
+
+# ------------------------------------------------------------------ params
+
+def _param_rule(names: list[str], ndim: int, cfg: ModelConfig, mesh: Mesh) -> P:
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    model_ok = lambda n: n % _axis_size(mesh, "model") == 0
+    data_ok = lambda n: n % _axis_size(mesh, "data") == 0
+
+    if leaf in ("scale", "bias", "ba", "bx", "conv_b", "A_log", "D", "dt_bias"):
+        return REPL
+    if leaf == "embed":
+        # vocab over model when divisible (sharded-softmax layout for tied
+        # heads); otherwise FSDP the d dim — the token gather stays local
+        # either way (never replicate the table).
+        if model_ok(cfg.vocab_size):
+            return P("model", None)
+        return P(None, "data" if data_ok(cfg.d_model) else None)
+    if leaf == "lm_head":
+        if model_ok(cfg.vocab_size):
+            return P(None, "model")
+        return P("data" if data_ok(cfg.d_model) else None, None)
+    if parent in ("attn", "self", "cross"):
+        d_ax = "data" if data_ok(cfg.d_model) else None
+        if leaf == "q":
+            return P(d_ax, "model" if model_ok(cfg.n_heads) else None, None)
+        if leaf in ("k", "v"):
+            return P(d_ax, "model" if model_ok(cfg.n_kv_heads) else None, None)
+        if leaf == "o":
+            return P("model" if model_ok(cfg.n_heads) else None, None, d_ax)
+    if parent in ("mlp", "shared"):
+        if leaf in ("wi", "wg"):
+            return P("data" if data_ok(cfg.d_model) else None, "model")
+        if leaf == "wo":
+            return P("model", "data" if data_ok(cfg.d_model) else None)
+    if leaf == "router":
+        return P(None, None)
+    if parent == "experts":  # (E, d, de) / (E, de, d): EP over model
+        ep = "model" if model_ok(cfg.n_experts) else None
+        if leaf in ("wi", "wg"):
+            return P(ep, "data" if data_ok(cfg.d_model) else None, None)
+        return P(ep, None, "data" if data_ok(cfg.d_model) else None)
+    if parent == "rglru":
+        r_ok = model_ok(cfg.d_rnn)
+        if leaf in ("in_x", "in_g"):
+            return P("data" if data_ok(cfg.d_model) else None,
+                     "model" if r_ok else None)
+        if leaf in ("wa", "wx"):
+            return P(None, "model" if r_ok else None)
+        if leaf == "conv_w":
+            return P(None, "model" if r_ok else None)
+        if leaf == "lam":
+            return P("model" if r_ok else None)
+        if leaf == "out":
+            return P("model" if r_ok else None,
+                     "data" if data_ok(cfg.d_model) else None)
+    if parent == "ssm":
+        if leaf == "in_proj":
+            return P("data" if data_ok(cfg.d_model) else None, None)
+        if leaf == "out_proj":
+            return P(None, "data" if data_ok(cfg.d_model) else None)
+        return REPL
+    return REPL
+
+
+_STACKED = {"groups", "enc", "dec"}
+
+
+def param_pspecs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching a params(-shaped) pytree."""
+
+    def rule(path, leaf):
+        names = _names(path)
+        spec = _param_rule(names, leaf.ndim, cfg, mesh)
+        if spec == REPL:
+            return REPL
+        if any(n in _STACKED for n in names):
+            spec = P(*([None] + list(spec)))
+        # pad to leaf rank (trailing dims replicated)
+        pad = leaf.ndim - len(spec)
+        if pad > 0:
+            spec = P(*(list(spec) + [None] * pad))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_pspecs(cfg: ModelConfig, opt_shape: Any, mesh: Mesh) -> Any:
+    """Optimizer state mirrors the params tree under 'm' and 'v'."""
+
+    def rule(path, leaf):
+        names = _names(path)
+        if names and names[0] == "count":
+            return REPL
+        sub_path = path[1:]  # strip the 'm'/'v' level
+        spec = _param_rule(_names(sub_path), leaf.ndim, cfg, mesh)
+        if spec == REPL:
+            return REPL
+        if any(n in _STACKED for n in _names(sub_path)):
+            spec = P(*([None] + list(spec)))
+        pad = leaf.ndim - len(spec)
+        if pad > 0:
+            spec = P(*(list(spec) + [None] * pad))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, opt_shape)
+
+
+# ------------------------------------------------------------------ inputs
+
+def _cache_rule(names, leaf, cfg: ModelConfig, mesh: Mesh, B: int, long_ctx: bool) -> P:
+    """Sharding for one cache leaf (kv / recurrent state / conv tail)."""
+    bax = batch_axes(B, mesh)
+    stacked = any(n in ("groups", "self", "cross") for n in names)
+    name = names[-1]
+    model = _axis_size(mesh, "model")
+
+    if name in ("k", "v"):
+        # (G?, B, KV, S, hd)
+        kv_ax = "model" if cfg.n_kv_heads % model == 0 else None
+        seq_axes = []
+        if kv_ax is None:
+            seq_axes.append("model")
+        if bax is None:
+            seq_axes = (["data"] + seq_axes) if "data" in mesh.axis_names else seq_axes
+        seq_ax = tuple(seq_axes) if len(seq_axes) > 1 else (seq_axes[0] if seq_axes else None)
+        spec = [bax, kv_ax, seq_ax, None]
+    elif name == "h":
+        # rglru (G?, B, r) | ssm (G?, B, H, P, N)
+        base_ndim = leaf.ndim - (1 if stacked else 0)
+        if base_ndim == 2:
+            r_ax = "model" if cfg.d_rnn % model == 0 else None
+            spec = [bax, r_ax]
+        else:
+            h_ax = "model" if cfg.ssm_state and cfg.n_ssm_heads % model == 0 else None
+            spec = [bax, h_ax, None, None]
+    elif name == "conv":
+        ch_ax = None
+        if cfg.rglru_width and cfg.d_rnn % model == 0 and leaf.shape[-1] == cfg.d_rnn:
+            ch_ax = "model"
+        spec = [bax, None, ch_ax]
+    else:
+        return REPL
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeSpec, specs: Any, mesh: Mesh) -> Any:
+    """Sharding tree matching ``configs.input_specs(cfg, shape)``."""
+    B = shape.global_batch
+    bax = batch_axes(B, mesh)
+    long_ctx = shape.name == "long_500k"
+
+    def rule(path, leaf):
+        names = _names(path)
+        top = names[0]
+        if top in ("inputs", "targets", "mask", "token"):
+            return P(*([bax] + [None] * (leaf.ndim - 1)))
+        if top in ("extra_embeds", "src_embeds"):
+            return P(*([bax] + [None] * (leaf.ndim - 1)))
+        if top == "pos":
+            return REPL
+        if top == "caches":
+            return _cache_rule(names, leaf, cfg, mesh, B, long_ctx)
+        return REPL
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+def output_pspecs(cfg: ModelConfig, shape: ShapeSpec, out_shape: Any, mesh: Mesh) -> Any:
+    """Used for serve-step outputs: logits + caches."""
+    B = shape.global_batch
+    bax = batch_axes(B, mesh)
+    model = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        names = _names(path)
+        if names and names[0] == "logits":
+            v_ax = "model" if cfg.vocab_size % model == 0 else None
+            return P(bax, None, v_ax)
+        if names and names[0] == "caches":
+            return _cache_rule(names, leaf, cfg, mesh, B, shape.name == "long_500k")
+        return REPL
+
+    return jax.tree_util.tree_map_with_path(rule, out_shape)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def activation_policy(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> dict:
+    """Activation-sharding policy installed by launchers (see
+    repro.models.act_sharding): batch over DP axes, vocab-sharded logits,
+    expert-sharded MoE buffers.  Keeps GSPMD propagation on the rails."""
+    bax = batch_axes(shape.global_batch, mesh)
+    model = _axis_size(mesh, "model")
+    pol = {
+        "residual": NamedSharding(mesh, P(bax, None, None)),
+        "logits": NamedSharding(
+            mesh,
+            P(bax, None, "model" if cfg.vocab_size % model == 0 else None),
+        ),
+    }
+    if cfg.n_experts and cfg.n_experts % model == 0:
+        pol["moe_ecd"] = NamedSharding(mesh, P("model", None, None))
+        # gather-dispatch reads the token table replicated (see moe.py)
+        pol["moe_tokens"] = NamedSharding(mesh, P(None, None))
+    return pol

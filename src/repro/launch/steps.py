@@ -1,0 +1,132 @@
+"""Step-function factories shared by the dry-run, trainer, and server.
+
+``make_train_step``  — gradient-accumulated (lax.scan over microbatches)
+value_and_grad + AdamW update.  Microbatching bounds activation memory (the
+"wave" structure of the paper's job model: microbatches are waves of work
+over the same slots); accumulation is fp32.
+
+``make_prefill_step`` / ``make_decode_step`` — serving paths returning
+``{"logits", "caches"}`` dicts (named outputs keep the sharding rules
+declarative).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "pick_microbatches",
+    "init_params",
+]
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    return ed.init_encdec(key, cfg) if cfg.is_encdec else lm.init(key, cfg)
+
+
+def _loss(cfg: ModelConfig) -> Callable:
+    if cfg.is_encdec:
+        return lambda p, b: ed.loss_fn_encdec(p, cfg, b)
+    return lambda p, b: lm.loss_fn(p, cfg, b)
+
+
+def pick_microbatches(
+    global_batch: int, seq_len: int, dp_size: int, *, tokens_per_mb: int = 8192
+) -> int:
+    """Largest accumulation depth that keeps per-device microbatch tokens
+    near ``tokens_per_mb`` while dividing the per-replica batch evenly."""
+    per_dp = max(1, global_batch // max(dp_size, 1))
+    want = max(1, (per_dp * seq_len) // tokens_per_mb)
+    n = 1
+    for cand in (1, 2, 4, 8, 16, 32):
+        if cand <= want and per_dp % cand == 0 and global_batch % cand == 0:
+            n = cand
+    return n
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, n_microbatches: int = 1):
+    loss_f = _loss(cfg)
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(loss_f, has_aux=True)
+
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_microbatches, -1) + x.shape[1:]), batch
+            )
+
+            def micro(carry, b):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, b)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = {}
+
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        out_metrics = {"loss": loss, **opt_metrics}
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, src_len: int | None = None):
+    if cfg.is_encdec:
+
+        def prefill_step(params, batch):
+            logits, caches, pos = ed.prefill_encdec(
+                params, cfg, batch["src_embeds"], batch["inputs"], max_len
+            )
+            return {"logits": logits, "caches": caches, "pos": pos}
+
+    else:
+
+        def prefill_step(params, batch):
+            logits, caches, pos = lm.prefill(
+                params, cfg, batch["inputs"], max_len,
+                extra_embeds=batch.get("extra_embeds"),
+            )
+            return {"logits": logits, "caches": caches, "pos": pos}
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    if cfg.is_encdec:
+
+        def decode_fn(params, batch):
+            logits, caches = ed.decode_step_encdec(
+                params, cfg, batch["token"], batch["caches"], batch["pos"]
+            )
+            return {"logits": logits, "caches": caches}
+
+    else:
+
+        def decode_fn(params, batch):
+            logits, caches = lm.decode_step(
+                params, cfg, batch["token"], batch["caches"], batch["pos"]
+            )
+            return {"logits": logits, "caches": caches}
+
+    return decode_fn

@@ -1,0 +1,17 @@
+"""MapReduce-on-JAX: the executable substrate the paper's models predict.
+
+* :mod:`engine`      — faithful Hadoop-semantics execution (buffers, spills,
+  multi-pass merges, shuffle, reduce) with exact per-phase dataflow counters;
+  the combiner runs on the Pallas ``seg_combine`` kernel.
+* :mod:`distributed` — shard_map pipeline (map -> combine -> all_to_all
+  shuffle -> sort -> reduce) for mesh execution and the multi-pod dry-run.
+* :mod:`jobs`        — canonical benchmark jobs (wordcount, sort, filter,
+  aggregate) with synthetic datasets.
+* :mod:`profiler`    — Starfish-style profiler: measure ProfileStats +
+  phase timings from a live run; fit CostFactors; predict other configs.
+"""
+
+from .engine import JobCounters, MapReduceEngine
+from .jobs import JOBS, JobSpec, make_input
+
+__all__ = ["MapReduceEngine", "JobCounters", "JobSpec", "JOBS", "make_input"]

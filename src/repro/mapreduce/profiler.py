@@ -1,0 +1,213 @@
+"""Starfish-style job profiler: measure Table-2 statistics and fit Table-3
+cost factors from live engine runs, then predict other configurations.
+
+This closes the paper's loop end-to-end **on real executions**:
+
+  1. :func:`profile_job` runs the engine once and extracts the measured
+     ProfileStats (selectivities, widths) — the paper's "job profile".
+  2. :func:`fit_cost_factors` runs the engine over a set of configurations,
+     assembles the paper's linear cost structure (every phase cost is
+     Σ dataflow-quantity x cost-factor) and solves a non-negative least
+     squares for the CostFactors.
+  3. :func:`predict` evaluates the closed-form job model (ref.py) with the
+     measured profile + fitted factors — the number Starfish would use for
+     what-if analysis — and :func:`prediction_error` compares it against
+     measured wall time at configs never used for fitting.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.hadoop import ref
+from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
+from .engine import JobCounters, MapReduceEngine
+from .jobs import JobSpec, make_input
+
+__all__ = [
+    "profile_job",
+    "MeasuredRun",
+    "run_measured",
+    "fit_cost_factors",
+    "predict",
+    "prediction_error",
+]
+
+
+def profile_job(jc: JobCounters, job: JobSpec, hp: HadoopParams) -> ProfileStats:
+    """Extract the paper's Table-2 statistics from measured counters."""
+    in_pairs = sum(m.inputPairs for m in jc.maps)
+    in_bytes = sum(m.inputBytes for m in jc.maps)
+    out_pairs = sum(m.outMapPairs for m in jc.maps)
+    out_bytes = sum(m.outMapSize for m in jc.maps)
+    interm_ratio = 0.3 if hp.pIsIntermCompressed else 1.0
+    in_ratio = 0.4 if hp.pIsInCompressed else 1.0
+    uncompressed_in = in_bytes / in_ratio
+
+    kw = dict(
+        sInputPairWidth=uncompressed_in / max(in_pairs, 1),
+        sMapSizeSel=out_bytes / max(uncompressed_in, 1e-12),
+        sMapPairsSel=out_pairs / max(in_pairs, 1),
+        sInputCompressRatio=in_ratio,
+        sIntermCompressRatio=interm_ratio,
+        sOutCompressRatio=0.4 if hp.pIsOutCompressed else 1.0,
+    )
+    # combine selectivity: measured across the first spill (paper: per-spill)
+    spill_in = sum(m.spillBufferPairs * m.numSpills for m in jc.maps)
+    spill_out = sum(sum(m.spillFilePairs) for m in jc.maps)
+    if hp.pUseCombine and spill_in:
+        sel = min(spill_out / spill_in, 1.0)
+        kw.update(sCombinePairsSel=sel, sCombineSizeSel=sel)
+    if jc.reduces:
+        red_in = sum(r.inReducePairs for r in jc.reduces)
+        red_out = sum(r.outReducePairs for r in jc.reduces)
+        red_out_b = sum(r.outReduceSize for r in jc.reduces)
+        red_in_b = red_in * (out_bytes / max(out_pairs, 1))
+        out_ratio = kw["sOutCompressRatio"]
+        kw.update(
+            sReducePairsSel=red_out / max(red_in, 1),
+            sReduceSizeSel=(red_out_b / out_ratio) / max(red_in_b, 1e-12),
+        )
+    return ProfileStats(**kw)
+
+
+@dataclass
+class MeasuredRun:
+    hp: HadoopParams
+    stats: ProfileStats
+    counters: JobCounters
+    wall_s: float
+    phase_times: dict
+
+
+def run_measured(
+    job: JobSpec,
+    hp: HadoopParams,
+    n_pairs: int,
+    *,
+    seed: int = 0,
+    use_pallas_combine: bool = False,
+) -> MeasuredRun:
+    keys, values = make_input(job, n_pairs, seed=seed)
+    eng = MapReduceEngine(hp, job, use_pallas_combine=use_pallas_combine)
+    t0 = time.perf_counter()
+    jc = eng.run_job(keys, values)
+    wall = time.perf_counter() - t0
+    return MeasuredRun(hp, profile_job(jc, job, hp), jc, wall, jc.phase_totals())
+
+
+# ------------------------------------------------------------------ fitting
+
+# Design matrix columns — the subset of Table 3 identifiable from phase
+# timings of an uncompressed in-memory engine (compression costs are zero
+# by the paper's Initializations; IO factors fold into the same per-byte
+# slots the paper uses).
+_FIT_COLS = [
+    "cHdfsReadCost",        # per input byte          (read phase)
+    "cMapCPUCost",          # per input pair          (map phase)
+    "cPartitionCPUCost",    # per map-output pair     (collect)
+    "cSortCPUCost",         # per pair-comparison     (spill sort)
+    "cCombineCPUCost",      # per spilled pair        (spill combine)
+    "cLocalIOCost",         # per merge byte          (map+reduce merges)
+    "cMergeCPUCost",        # per merged pair         (merges)
+    "cNetworkCost",         # per shuffled byte       (shuffle)
+    "cReduceCPUCost",       # per reduce-input pair   (reduce)
+    "cHdfsWriteCost",       # per output byte         (write)
+]
+
+
+def _design_row(run: MeasuredRun) -> tuple[np.ndarray, np.ndarray]:
+    """Phase-time observations -> (A, y) rows with the paper's structure."""
+    jc = run.counters
+    t = run.phase_times
+    R = max(run.hp.pNumReducers, 1)
+
+    in_bytes = sum(m.inputBytes for m in jc.maps)
+    in_pairs = sum(m.inputPairs for m in jc.maps)
+    out_pairs = sum(m.outMapPairs for m in jc.maps)
+    spilled = sum(m.numRecSpilled for m in jc.maps)
+    sort_cmp = sum(
+        m.spillBufferPairs * max(np.log2(max(m.spillBufferPairs / R, 2.0)), 1.0)
+        * m.numSpills
+        for m in jc.maps
+    )
+    merge_bytes = sum(m.mergeReadBytes + m.mergeWriteBytes for m in jc.maps)
+    merge_pairs = sum(m.intermDataPairs for m in jc.maps)
+    shuf_bytes = sum(r.totalShuffleSize for r in jc.reduces)
+    red_pairs = sum(r.inReducePairs for r in jc.reduces)
+    out_bytes = sum(r.outReduceSize for r in jc.reduces)
+    sort_bytes = sum(r.sortMergeReadBytes for r in jc.reduces)
+    shuf_pairs = sum(sum(r.shuffleFilePairs) for r in jc.reduces)
+
+    rows, y = [], []
+
+    def row(**cols):
+        r = np.zeros(len(_FIT_COLS))
+        for k, v in cols.items():
+            r[_FIT_COLS.index(k)] = v
+        return r
+
+    rows.append(row(cHdfsReadCost=in_bytes)); y.append(t.get("read", 0.0))
+    rows.append(row(cMapCPUCost=in_pairs)); y.append(t.get("map", 0.0))
+    rows.append(row(cPartitionCPUCost=out_pairs)); y.append(t.get("collect", 0.0))
+    rows.append(row(cSortCPUCost=sort_cmp, cCombineCPUCost=spilled))
+    y.append(t.get("spill", 0.0))
+    rows.append(row(cLocalIOCost=merge_bytes, cMergeCPUCost=merge_pairs))
+    y.append(t.get("merge", 0.0))
+    rows.append(row(cNetworkCost=shuf_bytes, cMergeCPUCost=shuf_pairs))
+    y.append(t.get("shuffle", 0.0))
+    rows.append(row(cLocalIOCost=sort_bytes, cMergeCPUCost=red_pairs))
+    y.append(t.get("sort", 0.0))
+    rows.append(row(cReduceCPUCost=red_pairs, cHdfsWriteCost=out_bytes))
+    y.append(t.get("reduce_write", 0.0))
+    return np.stack(rows), np.asarray(y)
+
+
+def fit_cost_factors(runs: list[MeasuredRun]) -> CostFactors:
+    """Non-negative least squares over all phase observations."""
+    A = np.concatenate([_design_row(r)[0] for r in runs])
+    y = np.concatenate([_design_row(r)[1] for r in runs])
+    # scale columns for conditioning
+    scale = np.maximum(A.max(axis=0), 1e-12)
+    x, *_ = np.linalg.lstsq(A / scale, y, rcond=None)
+    x = np.maximum(x / scale, 0.0)
+    kw = dict(zip(_FIT_COLS, (float(v) for v in x)))
+    return CostFactors().replace(**kw)
+
+
+def predict(
+    hp: HadoopParams, stats: ProfileStats, costs: CostFactors
+) -> float:
+    """Closed-form total job cost (paper Eq. 98) in seconds."""
+    jm = ref.job_model(hp, stats, costs)
+    return jm.totalCost
+
+
+def prediction_error(
+    job: JobSpec,
+    fit_hps: list[HadoopParams],
+    test_hps: list[HadoopParams],
+    n_pairs: int,
+    *,
+    seed: int = 0,
+) -> dict:
+    """Fit on ``fit_hps``, predict ``test_hps``; report relative errors."""
+    fit_runs = [run_measured(job, hp, n_pairs, seed=seed) for hp in fit_hps]
+    costs = fit_cost_factors(fit_runs)
+    stats = fit_runs[0].stats
+    rows = []
+    for hp in test_hps:
+        run = run_measured(job, hp, n_pairs, seed=seed + 1)
+        pred = predict(hp, run.stats, costs)
+        rows.append({
+            "hp": hp, "measured_s": run.wall_s, "predicted_s": pred,
+            "rel_err": abs(pred - run.wall_s) / max(run.wall_s, 1e-9),
+        })
+    errs = [r["rel_err"] for r in rows]
+    return {
+        "costs": costs, "stats": stats, "rows": rows,
+        "mean_rel_err": float(np.mean(errs)), "max_rel_err": float(np.max(errs)),
+    }

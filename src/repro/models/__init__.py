@@ -1,0 +1,6 @@
+"""Architecture substrate: configs, layers, and the model assemblies."""
+
+from . import attention, encdec, layers, lm, moe, rglru, ssm  # noqa: F401
+from .config import ModelConfig
+
+__all__ = ["ModelConfig", "lm", "encdec", "attention", "layers", "moe", "rglru", "ssm"]

@@ -1,0 +1,57 @@
+"""Activation-sharding policy hooks.
+
+Model code is mesh-agnostic; launchers install a policy mapping activation
+*kinds* to shardings, and the model calls :func:`constrain` at layout-
+critical points (residual stream, logits, MoE dispatch).  With no policy
+installed (unit tests, single-device runs) every hook is a no-op.
+
+Kinds:
+* ``residual``  — (B, S, d) stream between blocks
+* ``logits``    — (B, S, V)
+* ``moe_ecd``   — (E, C, d) expert buffers
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = ["set_policy", "clear_policy", "constrain", "policy_active"]
+
+_POLICY: dict[str, Any] = {}
+
+
+def set_policy(policy: dict[str, Any]) -> None:
+    """policy: kind -> jax.sharding.NamedSharding (or None to skip kind)."""
+    global _POLICY
+    _POLICY = dict(policy)
+
+
+def clear_policy() -> None:
+    global _POLICY
+    _POLICY = {}
+
+
+def policy_active() -> bool:
+    return bool(_POLICY)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    sh = _POLICY.get(kind)
+    if sh is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, sh)
+    except (ValueError, TypeError):
+        # shape/rank mismatch (e.g. decode S=1 vs padded spec): skip silently
+        return x
+
+
+def current_mesh():
+    """Mesh of the installed policy (None when no policy / no mesh)."""
+    for sh in _POLICY.values():
+        mesh = getattr(sh, "mesh", None)
+        if mesh is not None:
+            return mesh
+    return None

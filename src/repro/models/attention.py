@@ -1,0 +1,478 @@
+"""GQA attention: XLA-chunked prefill (flash-style online softmax) + decode.
+
+Three execution paths, selected by the caller:
+
+* ``chunked_attention``  — prefill/training path.  A ``lax.scan`` over KV
+  chunks with online-softmax accumulation, so the (Sq x Sk) score matrix is
+  never materialized in HBM — the XLA analogue of flash attention, and the
+  formulation the Pallas kernel (``repro.kernels.flash_attention``) mirrors
+  block-for-block.  Supports causal, sliding-window and bidirectional masks
+  plus Gemma-2 logit soft-capping.
+* ``decode_attention``   — single-query attention over a (possibly ring)
+  KV cache, used by ``serve_step``.
+* Pallas kernels         — TPU target; wired in via ``repro.kernels.ops``
+  when ``attention_impl='pallas'`` (validated in interpret mode on CPU).
+
+KV caches come in two layouts (chosen per layer kind):
+
+* **full** — slot ``i`` holds position ``i``; size = max context.
+* **ring** — slot ``i`` holds the latest position ``p == i (mod W)``; size =
+  window ``W``.  Local-attention layers use ring caches, which is what makes
+  ``long_500k`` decode memory O(W) instead of O(context) for those layers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, softcap
+
+__all__ = [
+    "init_attention",
+    "attention_projections",
+    "chunked_attention",
+    "decode_attention",
+    "attn_block_prefill",
+    "attn_block_decode",
+    "init_kv_cache",
+    "set_attention_impl",
+    "get_attention_impl",
+]
+
+_NEG = -1e30
+
+# "xla" (lax.scan online softmax) | "pallas" (repro.kernels, interpret on CPU).
+_IMPL = "xla"
+
+
+def set_attention_impl(impl: str) -> None:
+    assert impl in ("xla", "pallas"), impl
+    global _IMPL
+    _IMPL = impl
+
+
+def get_attention_impl() -> str:
+    return _IMPL
+
+
+def _dispatch_prefill(q, k, v, *, causal, window, logit_cap, q_offset):
+    if _IMPL == "pallas":
+        from repro.kernels import flash_attention as _fa  # lazy: optional path
+
+        bq = min(128, max(8, q.shape[2]))
+        bk = min(128, max(8, k.shape[2]))
+        return _fa(q, k, v, causal, window, logit_cap, q_offset, bq, bk)
+    from .opt_flags import get_flags
+
+    if get_flags().flash_bwd:
+        return flash_attention_xla(q, k, v, causal, window, logit_cap, q_offset)
+    return chunked_attention(
+        q, k, v, causal=causal, window=window, logit_cap=logit_cap,
+        q_offset=q_offset,
+    )
+
+
+def _dispatch_decode(q, k_cache, v_cache, slot_pos, pos, *, window, logit_cap):
+    if _IMPL == "pallas":
+        from repro.kernels import gqa_decode_attention as _da
+
+        return _da(
+            q, k_cache, v_cache, slot_pos, pos,
+            window=window, logit_cap=logit_cap,
+        )
+    return decode_attention(
+        q, k_cache, v_cache, slot_pos, pos, window=window, logit_cap=logit_cap
+    )
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    so = (n_heads * head_dim) ** -0.5
+    return {
+        "q": jax.random.normal(kq, (d, n_heads, head_dim), jnp.float32) * s,
+        "k": jax.random.normal(kk, (d, n_kv, head_dim), jnp.float32) * s,
+        "v": jax.random.normal(kv, (d, n_kv, head_dim), jnp.float32) * s,
+        "o": jax.random.normal(ko, (n_heads, head_dim, d), jnp.float32) * so,
+    }
+
+
+def attention_projections(p: dict, x: jax.Array):
+    """x: (B, S, d) -> q (B, H, S, hd), k/v (B, KV, S, hd)."""
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["q"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["k"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["v"].astype(dtype))
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int | None, k_len=None):
+    """(Sq, C) additive mask bias in fp32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if k_len is not None:
+        ok &= k_pos[None, :] < k_len
+    return jnp.where(ok, 0.0, _NEG)
+
+
+def chunked_attention(
+    q: jax.Array,               # (B, H, Sq, hd)
+    k: jax.Array,               # (B, KV, Sk, hd)
+    v: jax.Array,               # (B, KV, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    logit_cap: float | None = None,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention via lax.scan over KV chunks.  O(Sq*chunk) temps."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    G = H // KV
+    dtype = q.dtype
+    scale = hd ** -0.5
+
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+
+    qg = q.reshape(B, KV, G, Sq, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    # (n_chunks, B, KV, chunk, hd)
+    ks = k.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, idx = inputs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bngqh,bnch->bngqc", qg, kc).astype(jnp.float32) * scale
+        if logit_cap is not None:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window, k_len=Sk)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bngqc,bnch->bngqh", p.astype(dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (ks, vs, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, Sq, hd).astype(dtype)
+
+
+def _chunk_mask_bias(q_pos, k_pos, *, causal, window, k_len):
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    ok &= k_pos[None, :] < k_len
+    return jnp.where(ok, 0.0, _NEG)
+
+
+def _flash_fwd_stats(q, k, v, causal, window, logit_cap, q_offset, chunk):
+    """chunked_attention forward that also returns (m, l) softmax stats."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    G = H // KV
+    dtype = q.dtype
+    scale = hd ** -0.5
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+    qg = q.reshape(B, KV, G, Sq, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    ks = k.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, idx = inputs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bngqh,bnch->bngqc", qg, kc).astype(jnp.float32) * scale
+        if logit_cap is not None:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        s = s + _chunk_mask_bias(q_pos, k_pos, causal=causal, window=window, k_len=Sk)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pmat = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + pmat.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bngqc,bnch->bngqh", pmat.astype(dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, jnp.arange(n_chunks)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
+    return out.reshape(B, H, Sq, hd), m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_xla(q, k, v, causal=True, window=None, logit_cap=None, q_offset=0):
+    """XLA flash attention with an O(Sq + chunk) *backward*.
+
+    Plain autodiff through the ``lax.scan`` of :func:`chunked_attention`
+    saves every per-chunk fp32 score/prob matrix for the backward —
+    measured at ~45% of per-device HBM traffic on starcoder2/train_4k
+    (EXPERIMENTS.md §Perf).  This custom VJP saves only (q, k, v, out, m,
+    l) and *recomputes* scores chunk-by-chunk in the backward — the
+    standard flash-attention backward, expressed in XLA."""
+    out, _, _ = _flash_fwd_stats(q, k, v, causal, window, logit_cap, q_offset, 1024)
+    return out
+
+
+def _flashx_fwd(q, k, v, causal, window, logit_cap, q_offset):
+    out, m, l = _flash_fwd_stats(q, k, v, causal, window, logit_cap, q_offset, 1024)
+    return out, (q, k, v, out, m, l)
+
+
+def _flashx_bwd(causal, window, logit_cap, q_offset, res, dout):
+    q, k, v, out, m, l = res
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    chunk = min(1024, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+    dtype = q.dtype
+    scale = hd ** -0.5
+
+    qg = q.reshape(B, KV, G, Sq, hd)
+    og = out.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    dog = dout.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    l_safe = jnp.maximum(l, 1e-30)
+    q_pos = q_offset + jnp.arange(Sq)
+    # delta_i = sum_h dout_ih * out_ih  (flash-bwd row correction)
+    delta = jnp.sum(dog * og, axis=-1)                     # (B,KV,G,Sq)
+
+    ks = k.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, KV, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def body(dq_acc, inputs):
+        kc, vc, idx = inputs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        raw = jnp.einsum("bngqh,bnch->bngqc", qg, kc).astype(jnp.float32) * scale
+        if logit_cap is not None:
+            t = jnp.tanh(raw / logit_cap)
+            s = logit_cap * t
+        else:
+            s = raw
+        s = s + _chunk_mask_bias(q_pos, k_pos, causal=causal, window=window, k_len=Sk)
+        pmat = jnp.exp(s - m[..., None]) / l_safe[..., None]      # (B,KV,G,Sq,c)
+
+        dv_c = jnp.einsum("bngqc,bngqh->bnch", pmat.astype(dtype), dog.astype(dtype))
+        dp = jnp.einsum("bngqh,bnch->bngqc", dog.astype(dtype), vc).astype(jnp.float32)
+        ds = pmat * (dp - delta[..., None])                        # d(s_used)
+        if logit_cap is not None:
+            ds = ds * (1.0 - t * t)                                # through tanh
+        ds = (ds * scale).astype(dtype)
+        dq_c = jnp.einsum("bngqc,bnch->bngqh", ds, kc)
+        dk_c = jnp.einsum("bngqc,bngqh->bnch", ds, qg)
+        return dq_acc + dq_c.astype(jnp.float32), (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, jnp.arange(n_chunks)))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, KV, n_chunks * chunk, hd)[:, :, :Sk]
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, KV, n_chunks * chunk, hd)[:, :, :Sk]
+    return (
+        dq.reshape(B, H, Sq, hd).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )
+
+
+flash_attention_xla.defvjp(_flashx_fwd, _flashx_bwd)
+
+
+def decode_attention(
+    q: jax.Array,               # (B, H, 1, hd)
+    k_cache: jax.Array,         # (B, KV, S_cache, hd)
+    v_cache: jax.Array,         # (B, KV, S_cache, hd)
+    slot_pos: jax.Array,        # (S_cache,) int32: position held by each slot
+    pos: jax.Array,             # scalar int32: current position
+    *,
+    window: int | None = None,
+    logit_cap: float | None = None,
+) -> jax.Array:
+    """Single-token attention over a (full or ring) KV cache."""
+    B, H, _, hd = q.shape
+    KV = k_cache.shape[1]
+    G = H // KV
+    dtype = q.dtype
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bngh,bnch->bngc", qg, k_cache).astype(jnp.float32)
+    s = s * hd ** -0.5
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        ok &= slot_pos > pos - window
+    s = jnp.where(ok[None, None, None, :], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngc,bnch->bngh", w.astype(dtype), v_cache)
+    return out.reshape(B, H, 1, hd).astype(dtype)
+
+
+# ------------------------------------------------------------------ caches
+
+def init_kv_cache(
+    batch: int, n_kv: int, size: int, head_dim: int, dtype
+) -> dict:
+    """Layout for both full (size=max ctx) and ring (size=window) caches."""
+    return {
+        "k": jnp.zeros((batch, n_kv, size, head_dim), dtype),
+        "v": jnp.zeros((batch, n_kv, size, head_dim), dtype),
+    }
+
+
+def _ring_slot_positions(pos: jax.Array, size: int) -> jax.Array:
+    """Position stored in each ring slot at decode time ``pos``.
+
+    Slot ``i`` holds the latest position p <= pos with p == i (mod size);
+    slots never written (p < 0) are masked by the caller.
+    """
+    i = jnp.arange(size)
+    return pos - jnp.mod(pos - i, size)
+
+
+def _full_slot_positions(size: int) -> jax.Array:
+    return jnp.arange(size)
+
+
+# ------------------------------------------------------------------ blocks
+
+def attn_block_prefill(
+    p: dict,
+    x: jax.Array,               # (B, S, d)
+    inv_freq: jax.Array,
+    *,
+    kind: str,                  # "attn" | "local" | "encoder" | "cross"
+    window: int,
+    logit_cap: float | None,
+    cache_size: int | None = None,   # build a cache of this size if not None
+    kv_override: tuple | None = None,  # (k, v) for cross-attention
+    q_offset: int = 0,
+):
+    """Prefill/training attention; optionally returns an initialized cache."""
+    B, S, d = x.shape
+    if kv_override is None:
+        q, k, v = attention_projections(p, x)
+    else:
+        dtype = x.dtype
+        q = jnp.einsum("bsd,dhk->bhsk", x, p["q"].astype(dtype))
+        k, v = kv_override
+
+    positions = q_offset + jnp.arange(S)
+    if kind != "cross":
+        q = apply_rope(q, positions[None, None, :], inv_freq)
+        if kv_override is None:
+            k = apply_rope(k, positions[None, None, :], inv_freq)
+
+    causal = kind in ("attn", "local")
+    win = window if kind == "local" else None
+    out = _dispatch_prefill(
+        q, k, v, causal=causal, window=win, logit_cap=logit_cap,
+        q_offset=q_offset,
+    )
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["o"].astype(x.dtype))
+
+    cache = None
+    if cache_size is not None:
+        n_kv, hd = k.shape[1], k.shape[3]
+        cache = init_kv_cache(B, n_kv, cache_size, hd, x.dtype)
+        if kind == "local" and cache_size < S:
+            take = cache_size
+            last_pos = positions[S - take:]
+            slots = jnp.mod(last_pos, cache_size)
+            cache = {
+                "k": cache["k"].at[:, :, slots].set(k[:, :, S - take:]),
+                "v": cache["v"].at[:, :, slots].set(v[:, :, S - take:]),
+            }
+        else:
+            upto = min(S, cache_size)
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, :, :upto], 0, 2),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, :, :upto], 0, 2),
+            }
+    return y, cache
+
+
+def attn_block_decode(
+    p: dict,
+    x: jax.Array,               # (B, 1, d)
+    cache: dict,
+    pos: jax.Array,             # scalar int32 — position of this token
+    inv_freq: jax.Array,
+    *,
+    kind: str,                  # "attn" | "local" | "cross"
+    window: int,
+    logit_cap: float | None,
+):
+    """One decode step: update cache (unless cross) and attend over it."""
+    B, _, d = x.shape
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["q"].astype(dtype))
+    size = cache["k"].shape[2]
+
+    if kind == "cross":
+        slot_pos = _full_slot_positions(size)
+        out = _dispatch_decode(
+            q, cache["k"], cache["v"], slot_pos, jnp.asarray(size, jnp.int32),
+            window=None, logit_cap=logit_cap,
+        )
+        y = jnp.einsum("bhsk,hkd->bsd", out, p["o"].astype(dtype))
+        return y, cache
+
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["k"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["v"].astype(dtype))
+    posb = jnp.reshape(pos, (1, 1, 1))
+    q = apply_rope(q, jnp.broadcast_to(posb, (B, 1, 1)), inv_freq)
+    k = apply_rope(k, jnp.broadcast_to(posb, (B, 1, 1)), inv_freq)
+
+    if kind == "local":
+        slot = jnp.mod(pos, size)
+        slot_pos = _ring_slot_positions(pos, size)
+        win = window
+    else:
+        slot = pos
+        slot_pos = _full_slot_positions(size)
+        win = None
+
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 2)
+
+    out = _dispatch_decode(
+        q, k_cache, v_cache, slot_pos, pos, window=win, logit_cap=logit_cap
+    )
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["o"].astype(dtype))
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,215 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+Encoder: bidirectional attention + MLP, scanned over ``cfg.n_enc_layers``.
+Decoder: causal self-attention + cross-attention + MLP, scanned over
+``cfg.n_layers``.  The audio frontend is a stub per the task spec:
+``input_specs()`` supplies precomputed frame embeddings at ``d_model``.
+
+Serving: cross-attention K/V are computed once from the encoder output at
+prefill time and carried as a static cache; self-attention uses the same
+full-cache machinery as the decoder-only models.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain
+from .attention import (
+    attn_block_decode,
+    attn_block_prefill,
+    attention_projections,
+    init_attention,
+    init_kv_cache,
+)
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, init_embedding, init_mlp, init_norm, rope_frequencies, softcap
+
+__all__ = ["init_encdec", "encode", "forward_encdec", "prefill_encdec",
+           "decode_step_encdec", "loss_fn_encdec", "cache_spec_encdec"]
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_norm(cfg.d_model, cfg.norm_type),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln2": init_norm(cfg.d_model, cfg.norm_type),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg.d_model, cfg.norm_type),
+        "self": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln_x": init_norm(cfg.d_model, cfg.norm_type),
+        "cross": init_attention(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim),
+        "ln2": init_norm(cfg.d_model, cfg.norm_type),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_type),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+            jax.random.split(ks[1], cfg.n_enc_layers)
+        ),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm_type),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+            jax.random.split(ks[2], cfg.n_layers)
+        ),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, src_embeds: jax.Array, *, remat: bool = False):
+    """src_embeds: (B, S_src, d) from the (stubbed) modality frontend."""
+    inv_freq = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    x = src_embeds.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        h = apply_norm(lp["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        h, _ = attn_block_prefill(
+            lp["attn"], h, inv_freq, kind="encoder",
+            window=cfg.window_size, logit_cap=None,
+        )
+        x = constrain(x + h, "residual")
+        h = apply_norm(lp["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        x = constrain(x + apply_mlp(lp["mlp"], h, cfg.mlp_type), "residual")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return apply_norm(params["enc_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+
+def _dec_layer_prefill(lp, x, enc_out, inv_freq, cfg, cache_len):
+    h = apply_norm(lp["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    h, self_cache = attn_block_prefill(
+        lp["self"], h, inv_freq, kind="attn", window=cfg.window_size,
+        logit_cap=None, cache_size=cache_len,
+    )
+    x = constrain(x + h, "residual")
+    # cross attention over encoder output
+    dtype = x.dtype
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["cross"]["k"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, lp["cross"]["v"].astype(dtype))
+    h = apply_norm(lp["ln_x"], x, cfg.norm_type, cfg.norm_eps)
+    h, _ = attn_block_prefill(
+        lp["cross"], h, inv_freq, kind="cross", window=cfg.window_size,
+        logit_cap=None, kv_override=(k, v),
+    )
+    x = constrain(x + h, "residual")
+    h = apply_norm(lp["ln2"], x, cfg.norm_type, cfg.norm_eps)
+    x = constrain(x + apply_mlp(lp["mlp"], h, cfg.mlp_type), "residual")
+    cross_cache = {"k": k, "v": v} if cache_len is not None else None
+    return x, self_cache, cross_cache
+
+
+def forward_encdec(
+    params: dict,
+    cfg: ModelConfig,
+    src_embeds: jax.Array,
+    tgt_tokens: jax.Array,
+    *,
+    cache_len: int | None = None,
+    remat: bool = False,
+    logits_slice: int | None = None,
+):
+    """Teacher-forced encoder-decoder forward; returns (logits, caches)."""
+    inv_freq = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    enc_out = encode(params, cfg, src_embeds, remat=remat)
+
+    x = params["embed"][tgt_tokens].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        x, self_c, cross_c = _dec_layer_prefill(lp, x, enc_out, inv_freq, cfg, cache_len)
+        return x, (self_c, cross_c)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    x, (self_caches, cross_caches) = jax.lax.scan(body, x, params["dec"])
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    logits = softcap(logits, cfg.final_logit_softcap)
+
+    caches = None
+    if cache_len is not None:
+        caches = {"self": self_caches, "cross": cross_caches}
+    return logits, caches
+
+
+def prefill_encdec(params, cfg, src_embeds, tgt_tokens, max_len: int):
+    logits, caches = forward_encdec(
+        params, cfg, src_embeds, tgt_tokens, cache_len=max_len, logits_slice=1
+    )
+    return logits, caches, jnp.asarray(tgt_tokens.shape[1], jnp.int32)
+
+
+def decode_step_encdec(params, cfg, token, caches, pos):
+    """One decode step; caches = {"self": stacked, "cross": stacked}."""
+    inv_freq = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, inp):
+        lp, self_c, cross_c = inp
+        h = apply_norm(lp["ln1"], x, cfg.norm_type, cfg.norm_eps)
+        h, self_c = attn_block_decode(
+            lp["self"], h, self_c, pos, inv_freq, kind="attn",
+            window=cfg.window_size, logit_cap=None,
+        )
+        x = x + h
+        h = apply_norm(lp["ln_x"], x, cfg.norm_type, cfg.norm_eps)
+        h, _ = attn_block_decode(
+            lp["cross"], h, cross_c, pos, inv_freq, kind="cross",
+            window=cfg.window_size, logit_cap=None,
+        )
+        x = x + h
+        h = apply_norm(lp["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        x = x + apply_mlp(lp["mlp"], h, cfg.mlp_type)
+        return x, self_c
+
+    x, new_self = jax.lax.scan(body, x, (params["dec"], caches["self"], caches["cross"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, {"self": new_self, "cross": caches["cross"]}
+
+
+def cache_spec_encdec(cfg: ModelConfig, batch: int, max_len: int, src_len: int, dtype):
+    L = cfg.n_layers
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), tree)
+
+    self_c = stack(init_kv_cache(batch, cfg.n_kv_heads, max_len, cfg.head_dim, dtype))
+    cross_c = stack(init_kv_cache(batch, cfg.n_kv_heads, src_len, cfg.head_dim, dtype))
+    return {"self": self_c, "cross": cross_c}
+
+
+def loss_fn_encdec(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = True):
+    logits, _ = forward_encdec(
+        params, cfg, batch["src_embeds"], batch["inputs"], remat=remat
+    )
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("mask", jnp.ones_like(nll))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "tokens": jnp.sum(mask)}

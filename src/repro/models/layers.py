@@ -1,0 +1,114 @@
+"""Common neural layers: norms, MLPs, embeddings, rotary positions.
+
+Functional style throughout: ``init_*`` builds parameter pytrees (fp32),
+``apply``-style functions are pure and dtype-polymorphic (activations run in
+``config.dtype``, typically bf16; reductions in fp32 where it matters).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_norm", "apply_norm",
+    "init_mlp", "apply_mlp",
+    "init_embedding",
+    "rope_frequencies", "apply_rope",
+    "softcap",
+]
+
+
+# ------------------------------------------------------------------ norms
+
+def init_norm(d: int, norm_type: str) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, norm_type: str, eps: float) -> jax.Array:
+    """RMSNorm / LayerNorm with fp32 statistics (bf16-safe)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(dtype)
+
+
+# ------------------------------------------------------------------ MLPs
+
+def init_mlp(key: jax.Array, d: int, ff: int, mlp_type: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = ff ** -0.5
+    p = {
+        "wi": jax.random.normal(k1, (d, ff), jnp.float32) * scale_in,
+        "wo": jax.random.normal(k2, (ff, d), jnp.float32) * scale_out,
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["wg"] = jax.random.normal(k3, (d, ff), jnp.float32) * scale_in
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    dtype = x.dtype
+    h = x @ p["wi"].astype(dtype)
+    if mlp_type in ("swiglu", "geglu"):
+        g = x @ p["wg"].astype(dtype)
+        act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(dtype)
+
+
+# ------------------------------------------------------------------ embeddings
+
+def init_embedding(key: jax.Array, vocab: int, d: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotary subspace (fraction of head_dim)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(
+    x: jax.Array,            # (..., seq, head_dim)
+    positions: jax.Array,    # (..., seq) int32
+    inv_freq: jax.Array,     # (rot/2,)
+) -> jax.Array:
+    """Rotate the leading ``2*len(inv_freq)`` channels; pass the rest through."""
+    rot = 2 * inv_freq.shape[0]
+    if rot == 0:
+        return x
+    dtype = x.dtype
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, rot/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x_rot, x_pass = x[..., :rot].astype(jnp.float32), x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(dtype), x_pass], axis=-1) if rot < x.shape[-1] else y.astype(dtype)
+
+
+# ------------------------------------------------------------------ misc
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

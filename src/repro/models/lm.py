@@ -1,0 +1,457 @@
+"""Decoder-only LM assembly: dense / hybrid / MoE / SSM / VLM families.
+
+Key structural choices (all load-bearing for the multi-pod dry-run):
+
+* **scan-over-layers** — layers are grouped by the repeating
+  ``cfg.layer_pattern`` (e.g. gemma2's ``("local","attn")``); parameters of
+  each pattern member are *stacked* over the group axis and the stack is
+  consumed by one ``lax.scan``.  HLO size is O(pattern) instead of
+  O(n_layers), which is what makes 42-48-layer models lower+compile quickly
+  with 512 host devices.
+* **heterogeneous prefix** — layers that break the pattern (e.g. the dense
+  first FFN layer of DeepSeekMoE-style models, ``cfg.moe_layer_start``) are
+  kept un-stacked in front of the scan.
+* **caches as scanned pytrees** — each pattern member owns a cache pytree
+  stacked over groups; decode scans over (params, cache) jointly.
+* **functional API** — ``init(key, cfg)``, ``forward(...)``,
+  ``prefill(...)``, ``decode_step(...)``, ``loss_fn(...)`` are pure; the
+  runtime (pjit, remat, grad-accum) composes them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain
+from .attention import attn_block_decode, attn_block_prefill, init_attention, init_kv_cache
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, init_embedding, init_mlp, init_norm, rope_frequencies, softcap
+from .moe import apply_moe, init_moe
+from .rglru import init_rglru, init_rglru_state, rglru_decode, rglru_prefill
+from .ssm import init_ssm, init_ssm_state, ssm_decode, ssm_prefill
+
+__all__ = [
+    "init",
+    "forward",
+    "prefill",
+    "decode_step",
+    "loss_fn",
+    "prefix_kinds",
+    "cache_spec",
+]
+
+
+# ------------------------------------------------------------------ structure
+
+def prefix_kinds(cfg: ModelConfig) -> list[str]:
+    """Unstacked layers preceding the scanned pattern groups."""
+    kinds = list(cfg.prefix_pattern)
+    if cfg.n_experts and cfg.moe_layer_start > 0:
+        kinds += ["attn_dense"] * cfg.moe_layer_start
+    return kinds
+
+
+def _scan_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers - len(prefix_kinds(cfg))
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    n = _scan_layers(cfg)
+    assert n % cfg.pattern_len == 0, (cfg.name, n, cfg.layer_pattern)
+    return n // cfg.pattern_len
+
+
+def _ffn_kind(cfg: ModelConfig, kind: str) -> str:
+    """Which FFN a member uses: moe | dense | none (ssm has none)."""
+    if kind == "ssm":
+        return "none"
+    if kind == "attn_dense":
+        return "dense"
+    return "moe" if cfg.n_experts else "dense"
+
+
+# ------------------------------------------------------------------ members
+
+def _init_member(key: jax.Array, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": init_norm(d, cfg.norm_type)}
+    mixer = kind if kind != "attn_dense" else "attn"
+    if mixer in ("attn", "local"):
+        p["attn"] = init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    elif mixer == "rglru":
+        p["rglru"] = init_rglru(ks[0], cfg)
+    elif mixer == "ssm":
+        p["ssm"] = init_ssm(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown member kind {kind!r}")
+    if cfg.use_post_norm:
+        p["post1"] = init_norm(d, cfg.norm_type)
+
+    ffn = _ffn_kind(cfg, kind)
+    if ffn != "none":
+        p["ln2"] = init_norm(d, cfg.norm_type)
+        if ffn == "moe":
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            width = cfg.d_ff_dense if (kind == "attn_dense" and cfg.d_ff_dense) else cfg.d_ff
+            p["mlp"] = init_mlp(ks[1], d, width, cfg.mlp_type)
+        if cfg.use_post_norm:
+            p["post2"] = init_norm(d, cfg.norm_type)
+    return p
+
+
+def _apply_member_prefill(
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    inv_freq: jax.Array,
+    cache_size: int | None,
+    q_offset: int,
+):
+    """Residual block for one member; returns (x, cache, aux)."""
+    mixer = "attn" if kind == "attn_dense" else kind
+    h = apply_norm(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    cache = None
+    if mixer in ("attn", "local"):
+        size = None
+        if cache_size is not None:
+            size = min(cache_size, cfg.window_size) if mixer == "local" else cache_size
+        h, cache = attn_block_prefill(
+            p["attn"], h, inv_freq,
+            kind=mixer, window=cfg.window_size,
+            logit_cap=cfg.attn_logit_softcap, cache_size=size,
+            q_offset=q_offset,
+        )
+    elif mixer == "rglru":
+        h, st = rglru_prefill(p["rglru"], h, cfg)
+        cache = st if cache_size is not None else None
+    elif mixer == "ssm":
+        h, st = ssm_prefill(p["ssm"], h, cfg)
+        cache = st if cache_size is not None else None
+    if cfg.use_post_norm:
+        h = apply_norm(p["post1"], h, cfg.norm_type, cfg.norm_eps)
+    x = constrain(x + h, "residual")
+
+    aux = jnp.zeros((), jnp.float32)
+    ffn = _ffn_kind(cfg, kind)
+    if ffn != "none":
+        h = apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        if ffn == "moe":
+            h, aux = apply_moe(p["moe"], h, cfg)
+        else:
+            h = apply_mlp(p["mlp"], h, cfg.mlp_type)
+        if cfg.use_post_norm:
+            h = apply_norm(p["post2"], h, cfg.norm_type, cfg.norm_eps)
+        x = constrain(x + h, "residual")
+    return x, cache, aux
+
+
+def _apply_member_decode(
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    cache,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    inv_freq: jax.Array,
+):
+    mixer = "attn" if kind == "attn_dense" else kind
+    h = apply_norm(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    if mixer in ("attn", "local"):
+        h, cache = attn_block_decode(
+            p["attn"], h, cache, pos, inv_freq,
+            kind=mixer, window=cfg.window_size,
+            logit_cap=cfg.attn_logit_softcap,
+        )
+    elif mixer == "rglru":
+        h, cache = rglru_decode(p["rglru"], h, cache, cfg)
+    elif mixer == "ssm":
+        h, cache = ssm_decode(p["ssm"], h, cache, cfg)
+    if cfg.use_post_norm:
+        h = apply_norm(p["post1"], h, cfg.norm_type, cfg.norm_eps)
+    x = x + h
+
+    ffn = _ffn_kind(cfg, kind)
+    if ffn != "none":
+        h = apply_norm(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        if ffn == "moe":
+            # Dropless at decode: capacity = T tokens can never overflow.
+            h, _ = apply_moe(p["moe"], h, cfg, capacity=h.shape[0] * h.shape[1])
+        else:
+            h = apply_mlp(p["mlp"], h, cfg.mlp_type)
+        if cfg.use_post_norm:
+            h = apply_norm(p["post2"], h, cfg.norm_type, cfg.norm_eps)
+        x = x + h
+    return x, cache
+
+
+# ------------------------------------------------------------------ caches
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Any:
+    """Zero-initialized cache pytree (prefix list + per-member stacks)."""
+    G = _n_groups(cfg)
+
+    def one(kind: str):
+        mixer = "attn" if kind == "attn_dense" else kind
+        if mixer == "attn":
+            return init_kv_cache(batch, cfg.n_kv_heads, max_len, cfg.head_dim, dtype)
+        if mixer == "local":
+            return init_kv_cache(
+                batch, cfg.n_kv_heads, min(max_len, cfg.window_size), cfg.head_dim, dtype
+            )
+        if mixer == "rglru":
+            return init_rglru_state(cfg, batch, dtype)
+        if mixer == "ssm":
+            return init_ssm_state(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    prefix = [one(k) for k in prefix_kinds(cfg)]
+    groups = tuple(
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), one(k))
+        for k in cfg.layer_pattern
+    )
+    return {"prefix": prefix, "groups": groups}
+
+
+# ------------------------------------------------------------------ init
+
+def init(key: jax.Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    G = _n_groups(cfg)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+    }
+    pk = prefix_kinds(cfg)
+    if pk:
+        params["prefix"] = [
+            _init_member(k, cfg, kind)
+            for k, kind in zip(jax.random.split(keys[1], len(pk)), pk)
+        ]
+    params["groups"] = tuple(
+        jax.vmap(lambda k, kind=kind: _init_member(k, cfg, kind))(
+            jax.random.split(jax.random.fold_in(keys[2], mi), G)
+        )
+        for mi, kind in enumerate(cfg.layer_pattern)
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[3], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * cfg.d_model ** -0.5
+        )
+    return params
+
+
+# ------------------------------------------------------------------ forward
+
+def _embed_tokens(params, cfg, tokens, extra_embeds):
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dtype), x], axis=1)
+    return constrain(x, "residual")
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    return constrain(softcap(logits, cfg.final_logit_softcap), "logits")
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    extra_embeds: jax.Array | None = None,
+    cache_len: int | None = None,
+    remat: bool = False,
+    logits_slice: int | None = None,
+):
+    """Full-sequence forward.  Returns (logits, caches, aux_loss).
+
+    ``cache_len``: build serve caches of this size (prefill mode); None for
+    training.  ``logits_slice``: only produce logits for the last N
+    positions (serving computes just the final-token logits).
+    """
+    inv_freq = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    x = _embed_tokens(params, cfg, tokens, extra_embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    prefix_caches = []
+    for kind, p in zip(prefix_kinds(cfg), params.get("prefix", [])):
+        x, cache, aux = _apply_member_prefill(kind, p, x, cfg, inv_freq, cache_len, 0)
+        prefix_caches.append(cache)
+        aux_total = aux_total + aux
+
+    def body(carry, gp):
+        x, aux = carry
+        caches = []
+        for mi, kind in enumerate(cfg.layer_pattern):
+            x, cache, a = _apply_member_prefill(
+                kind, gp[mi], x, cfg, inv_freq, cache_len, 0
+            )
+            caches.append(cache)
+            aux = aux + a
+        return (x, aux), tuple(caches)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    (x, aux_total), group_caches = jax.lax.scan(
+        body, (x, aux_total), params["groups"]
+    )
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    logits = _logits(params, cfg, x)
+
+    caches = None
+    if cache_len is not None:
+        caches = {"prefix": prefix_caches, "groups": group_caches}
+    return logits, caches, aux_total
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    max_len: int,
+    *,
+    extra_embeds: jax.Array | None = None,
+):
+    """Serve-path prompt processing: last-token logits + primed caches."""
+    logits, caches, _ = forward(
+        params, cfg, tokens,
+        extra_embeds=extra_embeds, cache_len=max_len, logits_slice=1,
+    )
+    seq = tokens.shape[1] + (extra_embeds.shape[1] if extra_embeds is not None else 0)
+    return logits, caches, jnp.asarray(seq, jnp.int32)
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    token: jax.Array,        # (B, 1) int32
+    caches: dict,
+    pos: jax.Array,          # scalar int32: position of this token
+):
+    """One serving decode step.  Returns (logits (B,1,V), new caches)."""
+    inv_freq = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    x = _embed_tokens(params, cfg, token, None)
+
+    new_prefix = []
+    for kind, p, cache in zip(
+        prefix_kinds(cfg), params.get("prefix", []), caches["prefix"]
+    ):
+        x, cache = _apply_member_decode(kind, p, x, cache, pos, cfg, inv_freq)
+        new_prefix.append(cache)
+
+    from .opt_flags import get_flags
+
+    if get_flags().cache_update == "inplace":
+        # caches ride in the scan CARRY: one dynamic slice + in-place
+        # update per group instead of streaming (copying) the full stacked
+        # cache through xs->ys each token (§Perf decode optimization).
+        G = _n_groups(cfg)
+
+        def body_inplace(carry, inp):
+            x, gcaches = carry
+            gp, g = inp
+            cache_g = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, g, 0, keepdims=False),
+                gcaches,
+            )
+            new_caches = []
+            for mi, kind in enumerate(cfg.layer_pattern):
+                x, c = _apply_member_decode(
+                    kind, gp[mi], x, cache_g[mi], pos, cfg, inv_freq
+                )
+                new_caches.append(c)
+            gcaches = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new, g, 0
+                ),
+                gcaches, tuple(new_caches),
+            )
+            return (x, gcaches), None
+
+        (x, new_groups), _ = jax.lax.scan(
+            body_inplace, (x, caches["groups"]),
+            (params["groups"], jnp.arange(G)),
+        )
+    else:
+        def body(x, inp):
+            gp, gcache = inp
+            new_caches = []
+            for mi, kind in enumerate(cfg.layer_pattern):
+                x, c = _apply_member_decode(kind, gp[mi], x, gcache[mi], pos, cfg, inv_freq)
+                new_caches.append(c)
+            return x, tuple(new_caches)
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"], caches["groups"]))
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, {"prefix": new_prefix, "groups": new_groups}
+
+
+# ------------------------------------------------------------------ loss
+
+def loss_fn(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    remat: bool = True,
+    aux_weight: float = 0.01,
+):
+    """Next-token cross-entropy (+ MoE aux).  batch: inputs, targets[, mask,
+    extra_embeds].  Targets aligned with the *token* part of the sequence."""
+    extra = batch.get("extra_embeds")
+    logits, _, aux = forward(
+        params, cfg, batch["inputs"], extra_embeds=extra, remat=remat
+    )
+    if extra is not None:
+        logits = logits[:, extra.shape[1]:]
+
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    from .opt_flags import get_flags
+
+    if get_flags().sharded_loss:
+        # Vocab-shard-friendly cross-entropy: every (B,S,V) op is
+        # elementwise (stays sharded on V); only (B,S)-sized reductions
+        # cross the model axis.  Avoids the logits all-gather that
+        # take_along_axis can trigger under GSPMD (§Perf: gemma2 256k
+        # vocab made the baseline collective-bound).
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        z = jnp.sum(jnp.exp(logits - m), axis=-1)
+        logz = jnp.log(z) + m[..., 0]
+        onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+            == targets[..., None]
+        )
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    else:
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("mask", jnp.ones_like(nll))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux_weight * aux
+    metrics = {"loss": loss, "aux_loss": aux, "tokens": jnp.sum(mask)}
+    return total, metrics

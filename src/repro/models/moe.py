@@ -1,0 +1,308 @@
+"""Fine-grained Mixture-of-Experts layer (DeepSeekMoE / Moonlight style).
+
+Top-k routing over many small experts (+ optional always-on shared experts),
+implemented with the capacity-based einsum dispatch that shards cleanly
+under GSPMD: the expert dimension of ``experts/*`` tensors is laid out on
+the ``model`` mesh axis (expert parallelism), so the two big einsums
+(dispatch and combine) lower to all-to-all collectives on that axis — the
+direct TPU analogue of the paper's shuffle phase, and modeled as such by
+``repro.core.tpu_model``.
+
+Returns the standard Switch-style load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .act_sharding import constrain
+from .config import ModelConfig
+from .layers import apply_mlp, init_mlp
+from .opt_flags import get_flags
+
+__all__ = ["init_moe", "apply_moe"]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, E, de = cfg.d_model, cfg.n_experts, cfg.d_expert
+    kr, ki, kg, ko, ks = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, de ** -0.5
+    p = {
+        "router": jax.random.normal(kr, (d, E), jnp.float32) * s_in,
+        "experts": {
+            "wi": jax.random.normal(ki, (E, d, de), jnp.float32) * s_in,
+            "wg": jax.random.normal(kg, (E, d, de), jnp.float32) * s_in,
+            "wo": jax.random.normal(ko, (E, de, d), jnp.float32) * s_out,
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks, d, cfg.n_shared_experts * de, "swiglu")
+    return p
+
+
+def apply_moe(
+    p: dict, x: jax.Array, cfg: ModelConfig, *, capacity: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``capacity`` overrides the per-expert buffer depth; decode passes
+    ``capacity=T`` (dropless — an expert can never receive more than every
+    token), training uses the factor-based value.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    dtype = x.dtype
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                       # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # Capacity-based dispatch (Switch-style), k-major priority so first
+    # choices win buffer slots over second choices, etc.
+    C = capacity if capacity is not None else max(
+        1, math.ceil(cfg.moe_capacity_factor * T * K / E)
+    )
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)               # (T, K, E)
+    flat = onehot.transpose(1, 0, 2).reshape(K * T, E)             # k-major
+    position = jnp.cumsum(flat, axis=0) - 1                        # (K*T, E)
+    keep = (position < C) & (flat > 0)
+
+    impl = get_flags().moe_impl
+    if impl == "shardmap":
+        y = _expert_compute_shardmap(p, cfg, x, idx, gate_vals, capacity, dtype)
+    elif impl == "gather":
+        y = _expert_compute_gather(
+            p, cfg, xt, idx, gate_vals, position, keep, C, dtype
+        )
+    else:
+        y = _expert_compute_einsum(
+            p, cfg, xt, gate_vals, position, keep, C, dtype
+        )
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xt, "swiglu")
+
+    # Switch load-balancing loss: E * sum_e f_e * p_e.
+    f = onehot.sum(axis=1).astype(jnp.float32).mean(axis=0)
+    pbar = probs.mean(axis=0)                  # mean router prob of e
+    aux = E * jnp.sum(f * pbar)
+
+    return y.reshape(B, S, d), aux
+
+
+def _expert_ffn(p: dict, xin: jax.Array, dtype) -> jax.Array:
+    """(E, C, d) buffers -> (E, C, d); expert dim EP-sharded on 'model'."""
+    h = jnp.einsum("ecd,edf->ecf", xin, p["experts"]["wi"].astype(dtype))
+    g = jnp.einsum("ecd,edf->ecf", xin, p["experts"]["wg"].astype(dtype))
+    h = jax.nn.silu(g) * h
+    return constrain(
+        jnp.einsum("ecf,efd->ecd", h, p["experts"]["wo"].astype(dtype)),
+        "moe_ecd",
+    )
+
+
+def _expert_compute_einsum(p, cfg, xt, gate_vals, position, keep, C, dtype):
+    """Baseline: capacity one-hot dispatch/combine einsums.
+
+    Cost: the dispatch/combine matmuls are 2*T*E*C*d with E*C ~= cf*K*T —
+    QUADRATIC in per-device tokens; measured in the dry-run as ~30x the
+    expert flops for moonshot/train_4k (see EXPERIMENTS.md §Perf)."""
+    T, d = xt.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    slot = jax.nn.one_hot(position, C, dtype=jnp.float32)
+    disp_flat = slot * keep[..., None].astype(jnp.float32)         # (K*T, E, C)
+    disp = disp_flat.reshape(K, T, E, C).transpose(1, 0, 2, 3)     # (T, K, E, C)
+
+    dispatch = disp.sum(axis=1)                                    # (T, E, C)
+    combine = (disp * gate_vals[..., None, None]).sum(axis=1)      # (T, E, C)
+
+    xin = constrain(
+        jnp.einsum("tec,td->ecd", dispatch.astype(dtype), xt), "moe_ecd"
+    )
+    out = _expert_ffn(p, xin, dtype)
+    return jnp.einsum("tec,ecd->td", combine.astype(dtype), out)
+
+
+def _expert_compute_gather(p, cfg, xt, idx, gate_vals, position, keep, C, dtype):
+    """Optimized dispatch: scatter/gather token indices instead of one-hot
+    matmuls — O(T*K*d) data movement, identical routing semantics (same
+    k-major capacity rule, bit-equal expert inputs/outputs).
+
+    slot_tok[e, c] = index of the token occupying slot c of expert e
+    (T = sentinel -> zero row).  Expert buffers are built by one gather and
+    results returned by one gather; under EP the buffers stay sharded on
+    the expert axis and XLA moves only the routed activations."""
+    T, d = xt.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+
+    pos_tk = position.reshape(K, T, E)                             # k-major
+    keep_tk = keep.reshape(K, T, E)
+    # for each (k, t): its expert slot (or C -> dropped)
+    idx_km = idx.T                                                 # (K, T)
+    pos_sel = jnp.take_along_axis(
+        pos_tk, idx_km[..., None], axis=2
+    )[..., 0].astype(jnp.int32)                                    # (K, T)
+    keep_sel = jnp.take_along_axis(keep_tk, idx_km[..., None], axis=2)[..., 0]
+
+    # scatter token ids + gate values into (E, C) slot tables.  Dropped
+    # entries target column C (out of bounds -> mode="drop").
+    tok_ids = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (K, T))
+    e_flat = jnp.where(keep_sel, idx_km, E - 1).reshape(-1)
+    c_flat = jnp.where(keep_sel, pos_sel, C).reshape(-1)
+    slot_tok = jnp.full((E, C), T, jnp.int32).at[e_flat, c_flat].set(
+        jnp.where(keep_sel, tok_ids, T).reshape(-1), mode="drop"
+    )
+    gate_slot = jnp.zeros((E, C), jnp.float32).at[e_flat, c_flat].set(
+        jnp.where(keep_sel, gate_vals.T, 0.0).reshape(-1), mode="drop"
+    )
+
+    # dispatch: one gather (sentinel row T reads zeros).  slot_tok is
+    # EP-sharded on E; the token table stays data-sharded (explicitly
+    # replicating it was measured WORSE — the global microbatch is 537 MB;
+    # see EXPERIMENTS.md §Perf iter 4).
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), dtype)], axis=0)
+    xin = constrain(xt_pad[slot_tok], "moe_ecd")                   # (E, C, d)
+    out = _expert_ffn(p, xin, dtype)
+
+    # combine: gate-weight in place and scatter-ADD back to tokens.  Each
+    # expert shard accumulates its local slots into a (T+1, d) partial sum;
+    # the cross-shard combine is one activation-sized all-reduce — never
+    # materializes or transfers the (E*C, d) buffers (the iteration-1
+    # regression; see EXPERIMENTS.md §Perf).
+    # NB: scatter with the 2-D (E, C) index table directly — flattening to
+    # (E*C, d) first merges away the EP-sharded expert dim and the
+    # backward (a gather back to E*C rows) materializes unsharded fp32
+    # buffers (+22 s of all-reduce in the iter-3 measurement).
+    weighted = out * gate_slot[..., None].astype(out.dtype)        # (E, C, d)
+    y = jnp.zeros((T + 1, d), out.dtype).at[slot_tok].add(weighted)[:T]
+    return y.astype(dtype)
+
+
+def _local_dispatch_tables(idx, gate_vals, E, K, C, base, E_loc):
+    """Per-shard routing tables for experts [base, base+E_loc).
+
+    Same k-major capacity rule as the global paths, applied to the LOCAL
+    token set (T_loc tokens): position-in-expert via a cumsum over the
+    k-major flattened assignments.  Returns (slot_tok, gate_slot) of shape
+    (E_loc, C): token id per slot (T_loc = sentinel) and its gate.
+    """
+    T = idx.shape[0]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)               # (T, K, E)
+    flat = onehot.transpose(1, 0, 2).reshape(K * T, E)
+    position = jnp.cumsum(flat, axis=0) - 1                        # (K*T, E)
+    keep = (position < C) & (flat > 0)
+
+    pos_tk = position.reshape(K, T, E)
+    keep_tk = keep.reshape(K, T, E)
+    idx_km = idx.T                                                 # (K, T)
+    pos_sel = jnp.take_along_axis(pos_tk, idx_km[..., None], axis=2)[..., 0]
+    keep_sel = jnp.take_along_axis(keep_tk, idx_km[..., None], axis=2)[..., 0]
+    mine = keep_sel & (idx_km >= base) & (idx_km < base + E_loc)
+
+    tok_ids = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (K, T))
+    e_flat = jnp.where(mine, idx_km - base, 0).reshape(-1)
+    c_flat = jnp.where(mine, pos_sel, C).reshape(-1).astype(jnp.int32)
+    slot_tok = jnp.full((E_loc, C), T, jnp.int32).at[e_flat, c_flat].set(
+        jnp.where(mine, tok_ids, T).reshape(-1), mode="drop"
+    )
+    gate_slot = jnp.zeros((E_loc, C), jnp.float32).at[e_flat, c_flat].set(
+        jnp.where(mine, gate_vals.T, 0.0).reshape(-1), mode="drop"
+    )
+    return slot_tok, gate_slot
+
+
+def _expert_compute_shardmap(p, cfg, x, idx, gate_vals, capacity, dtype):
+    """Production EP layout via shard_map: per-DATA-shard routing, fully
+    local dispatch/expert/combine, ONE activation-sized psum over the
+    model axis per layer (+ its backward twin).
+
+    Layout facts that make everything local: activations are replicated
+    over 'model' and sharded over 'data'; expert weights are sharded over
+    'model' on the expert dim.  Every model rank therefore already holds
+    the tokens it needs and owns E/tp experts; rank r builds buffers for
+    its experts from its replicated token copy and contributes a partial
+    (T_loc, d) combine, summed by psum — the Megatron-MLP communication
+    pattern, with the paper's shuffle realized as partition-local
+    combining (a combiner running *before* the wire, Eq. 17's whole
+    point).
+
+    SEMANTIC NOTE (documented in EXPERIMENTS.md §Perf): capacity applies
+    per data shard (C_loc = ceil(cf·K·T_loc/E)) — the standard production
+    rule (per-device capacity) — whereas the faithful baseline applies it
+    to the global microbatch.  With balanced routing the drop sets differ
+    only at the margin; tests pin exact equivalence on 1-device meshes
+    where the two rules coincide.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from .act_sharding import current_mesh
+
+    mesh = current_mesh()
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+
+    if mesh is None or "model" not in mesh.axis_names:
+        # no mesh installed (unit tests): degenerate 1-shard semantics
+        mesh = None
+
+    def block(x_loc, idx_loc, gates_loc, wi, wg, wo):
+        Bl, Sl, _ = x_loc.shape
+        T_loc = Bl * Sl
+        E_loc = wi.shape[0]
+        C_loc = capacity if capacity is not None else max(
+            1, math.ceil(cfg.moe_capacity_factor * T_loc * K / E)
+        )
+        if mesh is not None:
+            rank = jax.lax.axis_index("model")
+        else:
+            rank = jnp.int32(0)
+        base = rank * E_loc
+
+        xt = x_loc.reshape(T_loc, d)
+        it = idx_loc.reshape(T_loc, K)
+        gt = gates_loc.reshape(T_loc, K)
+        slot_tok, gate_slot = _local_dispatch_tables(
+            it, gt, E, K, C_loc, base, E_loc
+        )
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), dtype)], axis=0)
+        xin = xt_pad[slot_tok]                                     # (E_loc,C,d)
+        h = jnp.einsum("ecd,edf->ecf", xin, wi.astype(dtype))
+        g = jnp.einsum("ecd,edf->ecf", xin, wg.astype(dtype))
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo.astype(dtype))
+        weighted = out * gate_slot[..., None].astype(out.dtype)
+        y_part = jnp.zeros((T_loc + 1, d), out.dtype).at[slot_tok].add(
+            weighted
+        )[:T_loc]
+        if mesh is not None:
+            y_part = jax.lax.psum(y_part, "model")
+        return y_part.reshape(Bl, Sl, d)
+
+    if mesh is None:
+        return block(
+            x, idx.reshape(B, S, K), gate_vals.reshape(B, S, K),
+            p["experts"]["wi"], p["experts"]["wg"], p["experts"]["wo"],
+        ).reshape(B * S, d)
+
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    bspec = P(batch_axes, None, None)
+    espec = P("model", None, None)
+    fn = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(bspec, bspec, bspec, espec, espec, espec),
+        out_specs=bspec,
+        check_vma=False,
+    )
+    y = fn(
+        x, idx.reshape(B, S, K), gate_vals.reshape(B, S, K),
+        p["experts"]["wi"], p["experts"]["wg"], p["experts"]["wo"],
+    )
+    return y.reshape(B * S, d)

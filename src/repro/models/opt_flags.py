@@ -1,0 +1,64 @@
+"""Performance-tuning flags (the framework's §Perf knob set).
+
+The paper's thesis is that a phase-level cost model plus a tunable
+configuration space turns performance into a search problem.  These are
+the TPU-side knobs that the §Perf hillclimb (EXPERIMENTS.md) searches
+over; they select between mathematically equivalent implementations, so
+every flag combination must pass the same smoke tests.
+
+Installed globally by launchers (same pattern as act_sharding policies) so
+model code stays signature-stable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["OptFlags", "set_flags", "get_flags", "clear_flags"]
+
+
+@dataclass(frozen=True)
+class OptFlags:
+    # MoE dispatch implementation:
+    #   "einsum" — capacity one-hot einsums (baseline; O(T^2) dispatch flops)
+    #   "gather" — sort/scatter token indexing (O(T*K*d); same routing rule)
+    moe_impl: str = "einsum"
+    # Mesh factorization override (logical): (dp, tp) with dp*tp = chips per
+    # pod.  None -> the launcher's default (16, 16).
+    mesh_factor: tuple[int, int] | None = None
+    # Cross-entropy: False -> rely on GSPMD propagation through
+    # logsumexp/take_along_axis; True -> explicitly vocab-shard-friendly
+    # formulation (local partial max/sum + tiny reductions).
+    sharded_loss: bool = False
+    # Keep the TP-boundary collectives in bf16 (cast back after the sum).
+    bf16_collectives: bool = False
+    # Flash-attention backward (custom_vjp, recomputes scores per chunk)
+    # instead of autodiff-through-scan (which saves fp32 score matrices).
+    flash_bwd: bool = False
+    # Gradient-accumulation depth override (None -> pick_microbatches).
+    # MoE working sets (capacity C, one-hot dispatch tensors) scale with
+    # tokens-per-microbatch, so deeper accumulation shrinks them.
+    n_micro_override: int | None = None
+    # Decode KV-cache update strategy:
+    #   "stream"  — caches are scan xs->ys (baseline; XLA copies the full
+    #               stacked cache once per layer group per token)
+    #   "inplace" — caches are scan CARRY state, updated per group with
+    #               dynamic_update_index (aliasing-friendly while state)
+    cache_update: str = "stream"
+
+
+_FLAGS = OptFlags()
+
+
+def set_flags(flags: OptFlags) -> None:
+    global _FLAGS
+    _FLAGS = flags
+
+
+def get_flags() -> OptFlags:
+    return _FLAGS
+
+
+def clear_flags() -> None:
+    global _FLAGS
+    _FLAGS = OptFlags()

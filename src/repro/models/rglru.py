@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The temporal-mixing block of RecurrentGemma: a gated linear branch and a
+recurrent branch (causal conv -> Real-Gated LRU), multiplied and projected
+back to the residual stream.
+
+RG-LRU recurrence (per channel)::
+
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = exp(c * r_t * (-softplus(L)))     # decay in (0, 1), c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill evaluates the linear recurrence with ``jax.lax.associative_scan``
+(log-depth, fully parallel — the TPU-native formulation; no sequential
+S-step loop); decode is the exact O(1) update.  The carried state plus a
+(conv_width-1) conv tail is all the context the block keeps, which is why
+recurrentgemma handles ``long_500k`` with O(1) per-layer state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = ["init_rglru", "rglru_prefill", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, r = cfg.d_model, cfg.d_rnn
+    ks = jax.random.split(key, 6)
+    s_d, s_r = d ** -0.5, r ** -0.5
+    # Lambda init so a^c spans ~(0.9, 0.999), as in the Griffin paper.
+    lam = jnp.log(jnp.expm1(jnp.linspace(2.0, 6.0, r)))
+    return {
+        "in_x": jax.random.normal(ks[0], (d, r), jnp.float32) * s_d,
+        "in_g": jax.random.normal(ks[1], (d, r), jnp.float32) * s_d,
+        "conv_w": jax.random.normal(ks[2], (cfg.rglru_conv, r), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "wa": jax.random.normal(ks[3], (r, r), jnp.float32) * s_r,
+        "ba": jnp.zeros((r,), jnp.float32),
+        "wx": jax.random.normal(ks[4], (r, r), jnp.float32) * s_r,
+        "bx": jnp.zeros((r,), jnp.float32),
+        "lam": lam,
+        "out": jax.random.normal(ks[5], (r, d), jnp.float32) * s_r,
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    r = cfg.d_rnn
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv - 1, r), dtype),
+    }
+
+
+def _gates(p: dict, x: jax.Array):
+    """x: (..., r) conv output -> (log_a, gated_input) in fp32."""
+    xf = x.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(xf @ p["wa"] + p["ba"])
+    i_gate = jax.nn.sigmoid(xf @ p["wx"] + p["bx"])
+    log_a = -_C * r_gate * jax.nn.softplus(p["lam"])      # <= 0
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * xf)
+    return a, u
+
+
+def rglru_prefill(
+    p: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y (B, S, d), final state)."""
+    B, S, d = x.shape
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ p["in_g"].astype(dtype))
+    xr_raw = x @ p["in_x"].astype(dtype)                   # (B, S, r)
+
+    km1 = cfg.rglru_conv - 1
+    pad = jnp.pad(xr_raw, ((0, 0), (km1, 0), (0, 0)))
+    conv = jnp.zeros_like(xr_raw)
+    for i in range(cfg.rglru_conv):
+        conv = conv + pad[:, i : i + S, :] * p["conv_w"].astype(dtype)[i]
+    conv = conv + p["conv_b"].astype(dtype)
+
+    a, u = _gates(p, conv)
+    # h_t = a_t h_{t-1} + u_t  via associative scan: (a, u) o (a', u') =
+    # (a a', a' u + u').
+    def combine(lhs, rhs):
+        a1, u1 = lhs
+        a2, u2 = rhs
+        return a1 * a2, a2 * u1 + u2
+
+    h_all = jax.lax.associative_scan(combine, (a, u), axis=1)[1]  # (B, S, r)
+    y = (h_all.astype(dtype) * gate) @ p["out"].astype(dtype)
+
+    state = {
+        "h": h_all[:, -1, :],
+        "conv": jnp.zeros((B, km1, xr_raw.shape[-1]), dtype).at[:, -min(S, km1):, :].set(
+            xr_raw[:, -min(S, km1):, :]
+        ),
+    }
+    return y, state
+
+
+def rglru_decode(
+    p: dict, x: jax.Array, state: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """One-token decode; x: (B, 1, d)."""
+    B, _, d = x.shape
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ p["in_g"].astype(dtype))        # (B, 1, r)
+    xr = x @ p["in_x"].astype(dtype)
+
+    hist = jnp.concatenate([state["conv"], xr], axis=1)    # (B, K, r)
+    conv = jnp.einsum("bkr,kr->br", hist, p["conv_w"].astype(dtype))
+    conv = conv + p["conv_b"].astype(dtype)
+
+    a, u = _gates(p, conv)                                 # (B, r)
+    h = a * state["h"] + u
+    y = (h[:, None, :].astype(dtype) * gate) @ p["out"].astype(dtype)
+    return y, {"h": h, "conv": hist[:, 1:, :]}

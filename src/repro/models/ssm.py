@@ -1,0 +1,184 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm.
+
+The paper's SSD formulation splits the sequence into chunks: inside a chunk
+the recurrence is computed in its quadratic "attention-like" dual form
+(MXU-friendly (L x L) matmuls); across chunks only the (H, P, N) states are
+carried by a ``lax.scan``.  Memory is O(L^2) per chunk instead of O(S^2),
+and the sequential dependency is S/L steps instead of S — the TPU-native
+adaptation of Mamba-2's CUDA kernel.
+
+Decode is the exact O(1) recurrence: ``h = a h + dt * (B (x) x)``,
+``y = C . h + D x``.
+
+Layout notes: a single B/C group is shared across all heads (n_groups=1,
+as in mamba2-130m); dt, A, D are per-head scalars.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_norm, init_norm
+
+__all__ = ["init_ssm", "ssm_prefill", "ssm_decode", "init_ssm_state"]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner_ssm
+    H = cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N  # conv runs over [x, B, C]
+    return d_in, H, P, N, conv_ch
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(k1, (d, proj_out), jnp.float32) * d ** -0.5,
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "norm": init_norm(d_in, "rmsnorm"),
+        "out_proj": jax.random.normal(k4, (d_in, d), jnp.float32) * d_in ** -0.5,
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, H, P, N, _ = _dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + d_in + 2 * N]
+    dt = proj[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq; xbc (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(K):  # K=4: unrolled shifts beat conv_general on TPU here
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssm_prefill(
+    p: dict, x: jax.Array, cfg: ModelConfig, *, chunk: int = 128
+) -> tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y (B, S, d), final recurrent state)."""
+    B, S, d = x.shape
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    dtype = x.dtype
+
+    proj = x @ p["in_proj"].astype(dtype)
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+    conv_tail = xbc_raw[:, max(0, S - (cfg.ssm_conv - 1)) :, :]
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(dtype), p["conv_b"].astype(dtype))
+    xs = xbc[..., :d_in].reshape(B, S, H, P)
+    Bm = xbc[..., d_in : d_in + N]                       # (B, S, N)
+    Cm = xbc[..., d_in + N :]                            # (B, S, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    neg_A = jnp.exp(p["A_log"])                           # (H,)
+    la = -neg_A * dt                                      # log decay, <= 0
+
+    # ---- chunked SSD scan ----
+    pad = (-S) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+    nC = (S + pad) // chunk
+
+    def to_chunks(a):
+        return a.reshape((B, nC, chunk) + a.shape[2:]).swapaxes(0, 1)
+
+    xs_c, Bm_c, Cm_c, dt_c, la_c = map(to_chunks, (xs, Bm, Cm, dt, la))
+
+    def body(h, inp):
+        xc, bc, cc, dtc, lac = inp           # (B, L, ...) for one chunk
+        cum = jnp.cumsum(lac, axis=1)        # (B, L, H)
+        # inter-chunk: contribution of the carried state.
+        y_inter = jnp.einsum("bln,bhpn->blhp", cc.astype(jnp.float32), h)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # intra-chunk quadratic dual form.
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,L,L,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(mask[None, :, :, None], cb[..., None] * decay, 0.0)
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", w, dtc, xc.astype(jnp.float32))
+        # state update for the next chunk.
+        wj = jnp.exp(cum[:, -1:, :] - cum) * dtc             # (B, L, H)
+        s_add = jnp.einsum("bjh,bjn,bjhp->bhpn", wj, bc.astype(jnp.float32), xc.astype(jnp.float32))
+        h_new = jnp.exp(cum[:, -1, :])[..., None, None] * h + s_add
+        return h_new, (y_inter + y_intra)
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, y_c = jax.lax.scan(body, h0, (xs_c, Bm_c, Cm_c, dt_c, la_c))
+    y = y_c.swapaxes(0, 1).reshape(B, S + pad, H, P)[:, :S]
+    y = y + p["D"][None, None, :, None] * xs[:, :S].astype(jnp.float32)
+
+    y = y.reshape(B, S, d_in).astype(dtype)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm", cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dtype)
+
+    # conv cache holds the last (K-1) *pre-activation* channel rows.
+    km1 = cfg.ssm_conv - 1
+    conv_cache = jnp.zeros((B, km1, conv_ch), dtype)
+    take = min(S, km1)
+    conv_cache = jax.lax.dynamic_update_slice_in_dim(
+        conv_cache, conv_tail[:, -take:, :], km1 - take, 1
+    )
+    return out, {"h": h_final, "conv": conv_cache}
+
+
+def ssm_decode(
+    p: dict, x: jax.Array, state: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """One-token decode; x: (B, 1, d)."""
+    B, _, d = x.shape
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    dtype = x.dtype
+
+    proj = x @ p["in_proj"].astype(dtype)
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+
+    hist = jnp.concatenate([state["conv"], xbc_raw], axis=1)  # (B, K, C)
+    w = p["conv_w"].astype(dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(dtype)
+    )[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    xs = conv_out[..., :d_in].reshape(B, H, P)
+    Bm = conv_out[:, 0, d_in : d_in + N]
+    Cm = conv_out[:, 0, d_in + N :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                                  # (B,H)
+
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xs.astype(jnp.float32))
+    h = a[..., None, None] * state["h"] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+
+    y = y.reshape(B, 1, d_in).astype(dtype)
+    y = apply_norm(p["norm"], y * jax.nn.silu(z), "rmsnorm", cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dtype)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,9 @@
+"""Optimizers and distributed-optimization utilities."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, lr_at
+from .compress import compress_grads, compress_init, decompress_grads
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "lr_at",
+    "compress_grads", "compress_init", "decompress_grads",
+]

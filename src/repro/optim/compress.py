@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod all-reduce (distributed-opt trick).
+
+Two compressors applied *before* the gradient all-reduce, with error
+feedback so compression noise is unbiased over steps:
+
+* ``bf16``  — round-to-bfloat16 (2x cross-pod traffic reduction, near-free).
+* ``int8``  — per-tensor symmetric int8 quantization (4x), with an error
+  feedback accumulator (Karimireddy et al.-style EF-SGD) carried in the
+  runtime state.
+
+The runtime applies these only to the slow ("pod") axis reduction; on-chip
+ICI reductions stay full precision.  See ``repro.runtime.train_loop``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_init", "compress_grads", "decompress_grads"]
+
+
+def compress_init(params: Any, method: str) -> Any:
+    if method == "int8":
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return None  # bf16 / none need no error state
+
+
+def _quant_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: Any, err: Any, method: str):
+    """Returns (compressed_tree, new_error_tree).
+
+    compressed leaves: bf16 arrays, or (int8 values, fp32 scale) tuples.
+    """
+    if method == "none":
+        return grads, err
+    if method == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), err
+    if method == "int8":
+        outs, errs = [], []
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(err)
+        for g, e in zip(flat_g, flat_e):
+            corrected = g.astype(jnp.float32) + e
+            q, scale = _quant_int8(corrected)
+            deq = q.astype(jnp.float32) * scale
+            outs.append((q, scale))
+            errs.append(corrected - deq)
+        return (
+            jax.tree.unflatten(treedef, [o for o in outs]),
+            jax.tree.unflatten(treedef, errs),
+        )
+    raise ValueError(f"unknown compression method {method!r}")
+
+
+def decompress_grads(comp: Any, grads_like: Any, method: str) -> Any:
+    if method == "none":
+        return comp
+    if method == "bf16":
+        return jax.tree.map(
+            lambda c, g: c.astype(g.dtype), comp, grads_like
+        )
+    if method == "int8":
+        flat_c = jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, tuple))
+        flat_g, treedef = jax.tree.flatten(grads_like)
+        outs = [
+            (q.astype(jnp.float32) * s).astype(g.dtype)
+            for (q, s), g in zip(flat_c, flat_g)
+        ]
+        return jax.tree.unflatten(treedef, outs)
+    raise ValueError(method)

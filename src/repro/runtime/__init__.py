@@ -1,0 +1,4 @@
+from .stragglers import StragglerDetector, should_speculate
+from .train_loop import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "StragglerDetector", "should_speculate"]

@@ -1,0 +1,77 @@
+"""Cross-pod gradient reduction with compression (distributed-opt trick).
+
+Within a pod, gradients reduce over ICI implicitly via pjit sharding.
+*Across* pods the link is the slow DCN tier, so the pod-axis reduction is
+expressed explicitly with shard_map + ``jax.lax.psum`` and the payload is
+compressed first (bf16 or int8+error-feedback, ``repro.optim.compress``).
+
+This is the Hadoop-paper NETCost lever: Eq. 90's network transfer shrinks
+by the compression ratio exactly as a combiner shrinks shuffle bytes —
+a *semantic* compressor applied before the wire.
+
+Used by the multi-pod dry-run path and unit-tested numerically on a
+2-device host mesh (tests/test_fault_tolerance.py::test_crosspod_compression).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim.compress import compress_grads, decompress_grads
+
+__all__ = ["crosspod_reduce"]
+
+
+def crosspod_reduce(grads, err, mesh: Mesh, *, method: str = "bf16", axis: str = "pod"):
+    """Mean-reduce ``grads`` over the pod axis with compressed payloads.
+
+    Returns (reduced_grads, new_error_state).  Leaves must already be
+    identical within a pod (post ICI reduction).
+    """
+    if axis not in mesh.axis_names or mesh.shape[axis] == 1:
+        return grads, err
+
+    npods = mesh.shape[axis]
+
+    def body(g, e):
+        if method == "int8":
+            # Shared scale: pmax of per-pod |g+e| first (scalar per leaf,
+            # negligible traffic), so the int32 psum of quantized payloads
+            # dequantizes exactly once — per-pod scales would not reduce.
+            def one(gl, el):
+                corrected = gl.astype(jnp.float32) + el
+                scale = jax.lax.pmax(
+                    jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12), axis
+                ) / 127.0
+                q = jnp.clip(jnp.round(corrected / scale), -127, 127)
+                deq = q * scale
+                red = jax.lax.psum(q.astype(jnp.int32), axis).astype(
+                    jnp.float32
+                ) * scale / npods
+                return red.astype(gl.dtype), corrected - deq
+
+            flat_g, treedef = jax.tree.flatten(g)
+            flat_e = jax.tree.leaves(e)
+            outs = [one(gl, el) for gl, el in zip(flat_g, flat_e)]
+            red = jax.tree.unflatten(treedef, [o[0] for o in outs])
+            new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        else:
+            comp, new_err = compress_grads(g, e, method)
+            summed = jax.tree.map(lambda c: jax.lax.psum(c, axis), comp)
+            red = decompress_grads(
+                jax.tree.map(lambda c: c / npods, summed), g, method
+            )
+        return red, new_err
+
+    # Each leaf is replicated over the pod axis (pjit already reduced the
+    # within-pod axes); shard_map sees the per-pod local view.
+    rep = P()
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=(rep, rep), out_specs=(rep, rep),
+        check_vma=False,
+    )
+    return fn(grads, err)

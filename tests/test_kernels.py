@@ -1,0 +1,168 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU).
+
+Every kernel is swept over shapes and dtypes and checked with
+``assert_allclose`` against ``kernels/ref.py``; masks (causal, sliding
+window, ring slots, k_len padding) and GQA group sizes are all exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, gqa_decode_attention, seg_combine
+from repro.kernels.ref import (
+    decode_attention_ref,
+    flash_attention_ref,
+    seg_combine_ref,
+)
+
+TOL = dict(rtol=2e-2, atol=2e-2)      # bf16-dominated paths
+TOL32 = dict(rtol=1e-5, atol=1e-5)
+
+
+def _qkv(key, B, H, KV, Sq, Sk, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, Sq, hd), dtype)
+    k = jax.random.normal(kk, (B, KV, Sk, hd), dtype)
+    v = jax.random.normal(kv, (B, KV, Sk, hd), dtype)
+    return q, k, v
+
+
+# ----------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KV,Sq,Sk,hd",
+    [
+        (1, 4, 2, 256, 256, 64),     # GQA, hd padded 64->128
+        (2, 2, 2, 128, 384, 128),    # cross-ish Sq != Sk
+        (1, 8, 1, 256, 256, 80),     # MQA, odd head dim
+    ],
+)
+def test_flash_matches_ref(B, H, KV, Sq, Sk, hd, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, H, KV, Sq, Sk, hd, dtype)
+    out = flash_attention(q, k, v, True, None, None, 0)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32),
+        **(TOL if dtype == jnp.bfloat16 else TOL32),
+    )
+
+
+@pytest.mark.parametrize("window", [64, 128, 1024])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 4, 4, 256, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, True, window, None, 0)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, **TOL32)
+
+
+def test_flash_logit_softcap_and_offset():
+    # gemma2-style soft-capping + continuation prefill (q_offset > 0)
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 4, 2, 128, 384, 128, jnp.float32)
+    out = flash_attention(q, k, v, True, None, 50.0, 256)
+    ref = flash_attention_ref(q, k, v, causal=True, logit_cap=50.0, q_offset=256)
+    np.testing.assert_allclose(out, ref, **TOL32)
+
+
+def test_flash_bidirectional_encoder():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 4, 4, 128, 128, 64, jnp.float32)
+    out = flash_attention(q, k, v, False, None, None, 0)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, **TOL32)
+
+
+def test_flash_unaligned_seq_padding():
+    # Sq=200, Sk=333: exercises block padding + k_len masking
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 2, 2, 200, 333, 64, jnp.float32)
+    out = flash_attention(q, k, v, False, None, None, 0)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, **TOL32)
+
+
+def test_flash_grad_matches_ref_grad():
+    q, k, v = _qkv(jax.random.PRNGKey(5), 1, 2, 1, 128, 128, 64, jnp.float32)
+
+    def loss_pallas(q, k, v):
+        return (flash_attention(q, k, v, True, None, None, 0) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (flash_attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- decode attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,S,hd", [(2, 8, 2, 512, 64), (1, 4, 4, 300, 128)])
+def test_decode_full_cache(B, H, KV, S, hd, dtype):
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, 1, hd), dtype)
+    kc = jax.random.normal(kk, (B, KV, S, hd), dtype)
+    vc = jax.random.normal(kv, (B, KV, S, hd), dtype)
+    slot_pos = jnp.arange(S, dtype=jnp.int32)
+    pos = jnp.asarray(S // 2, jnp.int32)      # only half the cache is valid
+
+    out = gqa_decode_attention(q, kc, vc, slot_pos, pos)
+    ref = decode_attention_ref(
+        q.reshape(B, KV, H // KV, hd), kc, vc, slot_pos, pos
+    ).reshape(B, H, 1, hd)
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32),
+        **(TOL if dtype == jnp.bfloat16 else TOL32),
+    )
+
+
+def test_decode_ring_cache_with_window():
+    # ring cache: slot i holds latest position == i (mod S); window masking
+    B, H, KV, S, hd, window = 1, 4, 1, 256, 64, 200
+    key = jax.random.PRNGKey(8)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, 1, hd), jnp.float32)
+    kc = jax.random.normal(kk, (B, KV, S, hd), jnp.float32)
+    vc = jax.random.normal(kv, (B, KV, S, hd), jnp.float32)
+    pos = jnp.asarray(1000, jnp.int32)
+    i = jnp.arange(S)
+    slot_pos = (pos - jnp.mod(pos - i, S)).astype(jnp.int32)
+
+    out = gqa_decode_attention(q, kc, vc, slot_pos, pos, window=window, logit_cap=30.0)
+    ref = decode_attention_ref(
+        q.reshape(B, KV, H // KV, hd), kc, vc, slot_pos, pos,
+        window=window, logit_cap=30.0,
+    ).reshape(B, H, 1, hd)
+    np.testing.assert_allclose(out, ref, **TOL32)
+
+
+# ----------------------------------------------------------- seg combine
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,D,P", [(1024, 256, 16), (777, 130, 7), (64, 8, 3)])
+def test_seg_combine_matches_scatter(N, D, P, dtype):
+    key = jax.random.PRNGKey(9)
+    kv_, kp = jax.random.split(key)
+    values = jax.random.normal(kv_, (N, D), dtype)
+    pids = jax.random.randint(kp, (N,), 0, P, jnp.int32)
+    out = seg_combine(values, pids, P)
+    ref = seg_combine_ref(values, pids, P)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
+
+
+def test_seg_combine_drops_negative_ids():
+    values = jnp.ones((128, 8), jnp.float32)
+    pids = jnp.where(jnp.arange(128) % 2 == 0, 0, -1).astype(jnp.int32)
+    out = seg_combine(values, pids, 4)
+    assert out[0, 0] == 64.0 and out[1:].sum() == 0.0
+
+
+def test_seg_combine_pair_counts():
+    # the paper's pairs-per-partition measurement: ones column
+    N, P = 640, 10
+    pids = (jnp.arange(N) % P).astype(jnp.int32)
+    counts = seg_combine(jnp.ones((N, 1), jnp.float32), pids, P)
+    np.testing.assert_allclose(counts[:, 0], np.full(P, N // P), rtol=0, atol=0)

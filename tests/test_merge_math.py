@@ -1,0 +1,109 @@
+"""Merge-round mathematics (paper §2.3, Eqs. 20-25) — unit + property tests."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hadoop.merge_math import (
+    calc_num_spills_final_merge,
+    calc_num_spills_first_pass,
+    calc_num_spills_interm_merge,
+    merge_plan,
+    num_merge_passes,
+    simulate_merge,
+)
+
+
+class TestPaperWorkedExample:
+    """numSpills=30, pSortFactor=10 — the example worked in §2.3."""
+
+    def test_first_pass(self):
+        assert calc_num_spills_first_pass(30, 10) == 3
+
+    def test_interm_merge(self):
+        assert calc_num_spills_interm_merge(30, 10) == 23
+
+    def test_final_merge(self):
+        assert calc_num_spills_final_merge(30, 10) == 10
+
+    def test_passes(self):
+        # 3 first-round passes create 3 files, merged in a 2nd round:
+        # pass structure = first(3) + 2x10 + final(10) = 4 passes.
+        assert num_merge_passes(30, 10) == 4
+
+
+@pytest.mark.parametrize(
+    "n,f,first,interm,final",
+    [
+        (1, 10, 1, 0, 1),      # Eq. 20 literal: returns N for N <= F
+        (5, 10, 5, 0, 5),      # N <= F: one final merge only
+        (10, 10, 10, 0, 10),
+        (11, 10, 2, 2, 10),    # (11-1) mod 9 = 1 -> first pass 2
+        (19, 10, 10, 10, 10),  # (19-1) mod 9 = 0 -> first pass F
+        (100, 10, 10, 100, 10),  # N = F^2 boundary
+    ],
+)
+def test_closed_form_cases(n, f, first, interm, final):
+    assert calc_num_spills_first_pass(n, f) == first
+    assert calc_num_spills_interm_merge(n, f) == interm
+    assert calc_num_spills_final_merge(n, f) == final
+
+
+@given(st.integers(2, 100), st.integers(2, 10))
+@settings(max_examples=300, deadline=None)
+def test_simulation_matches_closed_form(n, f):
+    """The paper's closed forms must equal the exact simulation for N<=F^2."""
+    if n > f * f:
+        return
+    plan = simulate_merge(n, f)
+    if n > f:
+        assert plan.first_pass == calc_num_spills_first_pass(n, f)
+    assert plan.interm_reads == calc_num_spills_interm_merge(n, f)
+    assert plan.final_merge_width == calc_num_spills_final_merge(n, f)
+    assert plan.passes == num_merge_passes(n, f)
+
+
+@given(st.integers(1, 5000), st.integers(2, 12))
+@settings(max_examples=300, deadline=None)
+def test_simulation_invariants(n, f):
+    """Structural invariants of any merge plan (also beyond N<=F^2)."""
+    plan = simulate_merge(n, f)
+    assert 0 <= plan.first_pass <= f
+    assert 1 <= plan.final_merge_width <= max(f, n) if n >= 1 else True
+    if n > 1:
+        assert plan.final_merge_width <= f or n <= f
+    # Every intermediate read is of a real spill: bounded by total re-reads.
+    assert plan.interm_reads >= 0
+    if n <= f:
+        assert plan.interm_reads == 0
+    # passes: 0 for n<=1, else at least 1, and first+interm+final accounting.
+    if n <= 1:
+        assert plan.passes == 0
+    elif n <= f:
+        assert plan.passes == 1
+    else:
+        assert plan.passes >= 2
+
+
+@given(st.integers(101, 4000))
+@settings(max_examples=100, deadline=None)
+def test_merge_plan_beyond_closed_form(n):
+    """merge_plan transparently switches to simulation when N > F^2."""
+    f = 10
+    if n <= f * f:
+        return
+    plan = merge_plan(n, f)
+    sim = simulate_merge(n, f)
+    assert plan == sim
+    # Re-merging merged files means interm reads exceed the first-touch count.
+    assert plan.interm_reads > n - plan.final_merge_width
+
+
+def test_example_beyond_f2():
+    """N=150, F=10: first pass 6, then 14 passes of 10 ones, then one re-merge
+    pass touching 60 spill-equivalents, final width 10."""
+    plan = simulate_merge(150, 10)
+    assert plan.first_pass == 6
+    assert plan.final_merge_width == 10
+    assert plan.passes == 17
+    assert plan.interm_reads == 6 + 140 + 60

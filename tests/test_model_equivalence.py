@@ -1,0 +1,177 @@
+"""Property tests: the vectorized JAX model == the pure-Python oracle.
+
+Hypothesis drives random (HadoopParams, ProfileStats, CostFactors) triples
+through both implementations of Eqs. 2-98; wherever the closed-form merge
+math is applicable (``valid == 1``) every reported quantity must agree to
+float64 round-off.  This is the same oracle pattern the Pallas kernels use.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.hadoop import (
+    CostFactors,
+    HadoopParams,
+    MiB,
+    ProfileStats,
+    job_model,
+    job_model_jnp,
+    pack_config,
+)
+
+# Map-task oracle field -> batched-model output key.
+# Fields valid for every job type:
+MAP_COMMON_FIELDS = [
+    ("inputMapSize", "m_inputMapSize"),
+    ("inputMapPairs", "m_inputMapPairs"),
+    ("outPairWidth", "m_outPairWidth"),
+    ("intermDataSize", "m_intermDataSize"),
+    ("intermDataPairs", "m_intermDataPairs"),
+    ("ioCost", "m_ioCost"),
+    ("cpuCost", "m_cpuCost"),
+]
+# Spill/merge fields exist only when the job has reducers (the oracle
+# returns early for map-only jobs and leaves them zero):
+MAP_FIELDS = [
+    ("maxSerPairs", "m_maxSerPairs"),
+    ("maxAccPairs", "m_maxAccPairs"),
+    ("spillBufferPairs", "m_spillBufferPairs"),
+    ("numSpills", "m_numSpills"),
+    ("spillFileSize", "m_spillFileSize"),
+    ("numSpillsIntermMerge", "m_numSpillsIntermMerge"),
+    ("numSpillsFinalMerge", "m_numSpillsFinalMerge"),
+    ("numMergePasses", "m_numMergePasses"),
+]
+REDUCE_FIELDS = [
+    ("segmentComprSize", "r_segmentComprSize"),
+    ("numSegInShuffleFile", "r_numSegInShuffleFile"),
+    ("shuffleFileSize", "r_shuffleFileSize"),
+    ("numShuffleFiles", "r_numShuffleFiles"),
+    ("numSegmentsInMem", "r_numSegmentsInMem"),
+    ("numShuffleMerges", "r_numShuffleMerges"),
+    ("numFilesOnDisk", "r_numFilesOnDisk"),
+    ("filesToMergeStep2", "r_filesToMergeStep2"),
+    ("step2MergingSize", "r_step2MergingSize"),
+    ("filesToMergeStep3", "r_filesToMergeStep3"),
+    ("step3MergingSize", "r_step3MergingSize"),
+    ("totalMergingSize", "r_totalMergingSize"),
+    ("inReduceSize", "r_inReduceSize"),
+    ("inRedDiskSize", "r_inRedDiskSize"),
+    ("ioCost", "r_ioCost"),
+    ("cpuCost", "r_cpuCost"),
+]
+
+params_st = st.builds(
+    HadoopParams,
+    pNumNodes=st.integers(1, 200),
+    pNumMappers=st.integers(1, 2000),
+    pNumReducers=st.integers(0, 400),
+    pSplitSize=st.sampled_from([16 * MiB, 64 * MiB, 128 * MiB, 256 * MiB]),
+    pSortMB=st.sampled_from([50.0, 100.0, 200.0, 400.0]),
+    pSpillPerc=st.sampled_from([0.6, 0.8, 0.9]),
+    pSortRecPerc=st.sampled_from([0.05, 0.1, 0.2]),
+    pSortFactor=st.sampled_from([5, 10, 25, 100]),
+    pNumSpillsForComb=st.sampled_from([3, 9999]),
+    pInMemMergeThr=st.sampled_from([10, 100, 1000]),
+    pShuffleInBufPerc=st.sampled_from([0.5, 0.7]),
+    pShuffleMergePerc=st.sampled_from([0.5, 0.66, 0.9]),
+    pReducerInBufPerc=st.sampled_from([0.0, 0.3, 0.6]),
+    pTaskMem=st.sampled_from([200.0 * MiB, 1024.0 * MiB]),
+    pUseCombine=st.booleans(),
+    pIsIntermCompressed=st.booleans(),
+    pIsOutCompressed=st.booleans(),
+    pIsInCompressed=st.booleans(),
+)
+stats_st = st.builds(
+    ProfileStats,
+    sInputPairWidth=st.sampled_from([24.0, 100.0, 650.0]),
+    sMapSizeSel=st.sampled_from([0.1, 0.7, 1.0, 2.3]),
+    sMapPairsSel=st.sampled_from([0.1, 1.0, 1.8]),
+    sReduceSizeSel=st.sampled_from([0.1, 1.0]),
+    sReducePairsSel=st.sampled_from([0.1, 1.0]),
+    sCombineSizeSel=st.sampled_from([0.25, 0.8]),
+    sCombinePairsSel=st.sampled_from([0.2, 0.7]),
+    sInputCompressRatio=st.sampled_from([0.3, 0.6]),
+    sIntermCompressRatio=st.sampled_from([0.3, 0.6]),
+    sOutCompressRatio=st.sampled_from([0.3, 0.6]),
+)
+
+
+@given(params_st, stats_st)
+@settings(max_examples=400, deadline=None)
+def test_jnp_model_matches_python_oracle(p, s):
+    c = CostFactors()
+    out = {k: float(np.asarray(v)) for k, v in job_model_jnp(pack_config(p, s, c)).items()}
+    if out["valid"] != 1.0:
+        return  # closed-form domain exceeded; the oracle simulates instead
+
+    j = job_model(p, s, c)
+    for ref_f, jnp_k in MAP_COMMON_FIELDS:
+        ref_v = float(getattr(j.map, ref_f))
+        assert out[jnp_k] == pytest.approx(ref_v, rel=1e-9, abs=1e-12), (
+            f"map field {ref_f}: oracle={ref_v} jnp={out[jnp_k]}"
+        )
+    if p.pNumReducers > 0:
+        for ref_f, jnp_k in MAP_FIELDS:
+            ref_v = float(getattr(j.map, ref_f))
+            assert out[jnp_k] == pytest.approx(ref_v, rel=1e-9, abs=1e-12), (
+                f"map field {ref_f}: oracle={ref_v} jnp={out[jnp_k]}"
+            )
+        for ref_f, jnp_k in REDUCE_FIELDS:
+            ref_v = float(getattr(j.reduce, ref_f))
+            assert out[jnp_k] == pytest.approx(ref_v, rel=1e-9, abs=1e-12), (
+                f"reduce field {ref_f}: oracle={ref_v} jnp={out[jnp_k]}"
+            )
+    for lvl in ("j_ioJobCost", "j_cpuJobCost", "j_netCost", "j_totalCost"):
+        ref_v = {
+            "j_ioJobCost": j.ioJobCost,
+            "j_cpuJobCost": j.cpuJobCost,
+            "j_netCost": j.netCost,
+            "j_totalCost": j.totalCost,
+        }[lvl]
+        assert out[lvl] == pytest.approx(ref_v, rel=1e-9, abs=1e-12)
+
+
+@given(params_st, stats_st)
+@settings(max_examples=200, deadline=None)
+def test_costs_are_finite_and_nonnegative(p, s):
+    """Invariant: every cost the model reports is finite and >= 0."""
+    c = CostFactors()
+    j = job_model(p, s, c)
+    for v in (
+        j.map.ioCost, j.map.cpuCost, j.reduce.ioCost, j.reduce.cpuCost,
+        j.netCost, j.ioJobCost, j.cpuJobCost, j.totalCost,
+    ):
+        assert np.isfinite(v) and v >= 0.0
+
+
+@given(params_st, stats_st)
+@settings(max_examples=150, deadline=None)
+def test_split_size_monotonicity(p, s):
+    """More input per map task can never make a single map task cheaper."""
+    c = CostFactors()
+    small = job_model(p.replace(pSplitSize=64 * MiB), s, c)
+    large = job_model(p.replace(pSplitSize=256 * MiB), s, c)
+    assert large.map.ioCost >= small.map.ioCost - 1e-9
+    assert large.map.cpuCost >= small.map.cpuCost - 1e-9
+
+
+def test_vmap_grid_matches_scalar_calls():
+    """A batched sweep over pSortMB equals per-point scalar evaluation."""
+    p, s, c = HadoopParams(pNumNodes=4, pNumMappers=40, pNumReducers=8), ProfileStats(), CostFactors()
+    grid = [32.0, 64.0, 128.0, 256.0, 512.0]
+    cfg = pack_config(p, s, c)
+    cfg["pSortMB"] = jnp.asarray(grid)
+    import jax
+
+    batched = jax.vmap(lambda v: job_model_jnp({**cfg, "pSortMB": v}))(
+        jnp.asarray(grid)
+    )
+    for i, v in enumerate(grid):
+        jref = job_model(p.replace(pSortMB=v), s, c)
+        assert float(batched["j_totalCost"][i]) == pytest.approx(
+            jref.totalCost, rel=1e-9
+        )

@@ -1,0 +1,86 @@
+"""Unit tests for the fine-grained MoE layer (routing, capacity, aux loss)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models.moe import apply_moe, init_moe
+
+CFG = get_config("deepseek-moe-16b").smoke()
+
+
+def _setup(key=0, B=2, S=16):
+    params = init_moe(jax.random.PRNGKey(key), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(key + 1), (B, S, CFG.d_model)) * 0.5
+    return params, x
+
+
+def test_output_shape_and_finite():
+    params, x = _setup()
+    y, aux = apply_moe(params, x, CFG)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.isfinite(float(aux))
+
+
+def test_aux_loss_lower_bound():
+    """Switch aux loss is minimized at 1.0 for perfectly uniform routing."""
+    params, x = _setup()
+    _, aux = apply_moe(params, x, CFG)
+    assert float(aux) >= 1.0 - 1e-3
+
+
+def test_dropless_capacity_is_length_independent():
+    """With capacity=T, a token's output is independent of later tokens."""
+    params, x = _setup(B=1, S=12)
+    y_full, _ = apply_moe(params, x, CFG, capacity=12)
+    y_short, _ = apply_moe(params, x[:, :8], CFG, capacity=8)
+    np.testing.assert_allclose(
+        np.asarray(y_full[:, :8]), np.asarray(y_short), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_tiny_capacity_drops_tokens():
+    """capacity=1 must drop expert traffic: output differs from dropless and
+    dropped tokens fall back to (shared-expert-only or zero) contribution."""
+    params, x = _setup(B=2, S=32)
+    y_drop, _ = apply_moe(params, x, CFG, capacity=1)
+    y_free, _ = apply_moe(params, x, CFG, capacity=64)
+    assert not np.allclose(np.asarray(y_drop), np.asarray(y_free), atol=1e-5)
+
+
+def test_priority_is_token_order():
+    """With capacity=1, the first token claiming an expert wins its slot:
+    prepending a competing token changes later tokens' outputs, never the
+    other way around (causal capacity competition)."""
+    params, x = _setup(B=1, S=8)
+    y, _ = apply_moe(params, x, CFG, capacity=1)
+    # duplicate token 0 at the front: token 0's (now token 1) slots may be
+    # stolen by its twin, but output for the *first* occurrence is unchanged.
+    x2 = jnp.concatenate([x[:, :1], x], axis=1)
+    y2, _ = apply_moe(params, x2, CFG, capacity=1)
+    np.testing.assert_allclose(
+        np.asarray(y2[:, 0]), np.asarray(y[:, 0]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_shared_expert_always_on():
+    """Zero routed capacity still yields the shared-expert contribution."""
+    params, x = _setup()
+    assert "shared" in params  # deepseek smoke keeps 1 shared expert
+    y, _ = apply_moe(params, x, CFG, capacity=1)
+    assert np.abs(np.asarray(y)).max() > 0
+
+
+@given(st.integers(1, 4), st.integers(1, 24))
+@settings(max_examples=20, deadline=None)
+def test_moe_shapes_property(b, s):
+    params = init_moe(jax.random.PRNGKey(0), CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, CFG.d_model)) * 0.3
+    y, aux = apply_moe(params, x, CFG)
+    assert y.shape == (b, s, CFG.d_model)
+    assert np.all(np.isfinite(np.asarray(y)))

@@ -1,0 +1,89 @@
+"""Roofline HLO parser: trip-count recovery, collective wire accounting,
+dot-flop census — on hand-written HLO fragments with known answers."""
+
+from repro.core.roofline import (
+    HW,
+    _Program,
+    collective_bytes,
+    hlo_totals,
+    roofline_terms,
+)
+
+HLO = """
+body.1 (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %dot.5 = f32[8,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.1 = f32[8,128]{1,0} all-reduce(%dot.5), replica_groups=[16,16]<=[256], to_apply=%add.1
+  %rs.1 = f32[8,8]{1,0} reduce-scatter(%ar.1), replica_groups=[16,16]<=[256], dimensions={1}
+}
+
+cond.1 (p: (s32[], f32[8,128])) -> pred[] {
+  %p2 = (s32[], f32[8,128]) parameter(0)
+  %c10 = s32[] constant(10)
+  %lt = pred[] compare(%gte, %c10), direction=LT
+}
+
+ENTRY main (x: f32[8,64]) -> f32[8,128] {
+  %a = f32[8,64]{1,0} parameter(0)
+  %b = f32[64,128]{1,0} constant(0)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%body.1
+  %ag.1 = f32[128,128]{1,0} all-gather(%gte2), replica_groups=[16,16]<=[256], dimensions={0}
+}
+"""
+
+
+def test_trip_count_from_condition_constant():
+    prog = _Program(HLO)
+    assert prog.body_trips.get("body.1") == 10
+    assert prog.eff_mult("body.1") == 10.0
+    assert prog.eff_mult("main") == 1.0
+
+
+def test_collective_wire_accounting():
+    stats = collective_bytes(HLO)
+    # all-reduce: 8*128*4 B x2 (wire) x10 trips
+    ar = 8 * 128 * 4 * 2 * 10
+    # reduce-scatter: result 8*8*4 x group 16 x10
+    rs = 8 * 8 * 4 * 16 * 10
+    # all-gather: 128*128*4 x1
+    ag = 128 * 128 * 4
+    assert stats.by_kind["all-reduce"] == ar
+    assert stats.by_kind["reduce-scatter"] == rs
+    assert stats.by_kind["all-gather"] == ag
+    assert stats.total_bytes == ar + rs + ag
+
+
+def test_dot_flop_census():
+    parsed = hlo_totals(HLO)
+    # dot: out 8x128, contracted 64 (lhs dim 1), x10 trips
+    assert parsed["dot_flops"] == 2 * 8 * 128 * 64 * 10
+
+
+def test_roofline_terms_per_device_convention():
+    parsed = hlo_totals(HLO)
+    coll = collective_bytes(HLO)
+    t = roofline_terms({"flops": 0.0, "bytes accessed": 1e9}, coll, 256,
+                       model_fl=2 * 8 * 128 * 64 * 10 * 256, parsed=parsed)
+    assert t.compute_s == parsed["dot_flops"] / HW["peak_flops"]
+    assert t.collective_s == coll.total_bytes / HW["ici_bw"]
+    assert 0.99 < t.useful_ratio <= 1.0
+
+
+def test_mapreduce_compressed_paths():
+    """Engine accounting under intermediate/output compression flags."""
+    from repro.core.hadoop.params import HadoopParams, MiB
+    from repro.mapreduce import JOBS, MapReduceEngine, make_input
+
+    job = JOBS["sort"]
+    n = 10_000
+    hp = HadoopParams(
+        pNumMappers=1, pNumReducers=2, pSortMB=0.5,
+        pIsIntermCompressed=True, pIsOutCompressed=True,
+        pSplitSize=n * job.pair_width, pTaskMem=8.0 * MiB,
+    )
+    jc = MapReduceEngine(hp, job).run_job(*make_input(job, n))
+    mc = jc.maps[0]
+    # compressed spill bytes = pairs x width x 0.3
+    assert abs(sum(mc.spillFileSize) - n * job.pair_width * 0.3) < 1e-6
+    rc = jc.reduces[0]
+    assert rc.outReduceSize < rc.inReducePairs * job.out_pair_width  # 0.4x

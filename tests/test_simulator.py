@@ -1,0 +1,90 @@
+"""Task Scheduler Simulator (paper §5(i)) — behaviour tests."""
+
+import pytest
+
+from repro.core.hadoop import (
+    CostFactors,
+    HadoopParams,
+    MiB,
+    ProfileStats,
+    SimConfig,
+    job_model,
+    simulate_job,
+)
+
+P = HadoopParams(pNumNodes=4, pNumMappers=32, pNumReducers=8, pSplitSize=64 * MiB)
+S = ProfileStats()
+C = CostFactors()
+
+
+def test_deterministic_given_seed():
+    a = simulate_job(P, S, C, SimConfig(seed=7, task_time_jitter=0.2))
+    b = simulate_job(P, S, C, SimConfig(seed=7, task_time_jitter=0.2))
+    assert a.makespan == b.makespan
+    assert len(a.records) == len(b.records)
+
+
+def test_wave_structure_matches_analytic_bound():
+    """32 maps / (4 nodes x 2 slots) = 4 waves: makespan >= 4 x map cost."""
+    r = simulate_job(P, S, C, SimConfig(speculative_execution=False))
+    jm = job_model(P, S, C)
+    map_cost = jm.map.ioCost + jm.map.cpuCost
+    assert r.map_finish_time == pytest.approx(4 * map_cost, rel=1e-6)
+    # The analytic model (Eq. 92/93) predicts exactly the 4-wave cost.
+    analytic_map_time = (jm.ioAllMaps + jm.cpuAllMaps)
+    assert r.map_finish_time == pytest.approx(analytic_map_time, rel=1e-6)
+
+
+def test_simulation_close_to_analytic_for_uniform_tasks():
+    """No noise, divisible waves -> simulation == analytic composition."""
+    r = simulate_job(P, S, C, SimConfig(speculative_execution=False))
+    jm = job_model(P, S, C)
+    analytic = (
+        jm.ioAllMaps + jm.cpuAllMaps + jm.ioAllReducers + jm.cpuAllReducers
+        + jm.netCost
+    )
+    # Reducers overlap the map phase after slowstart, so simulated makespan
+    # is bounded by sequential analytic estimate but close to it.
+    assert r.makespan <= analytic * 1.05
+    assert r.makespan >= analytic * 0.5
+
+
+def test_stragglers_hurt_and_speculation_helps():
+    slow = simulate_job(
+        P, S, C,
+        SimConfig(seed=3, straggler_prob=0.15, straggler_slowdown=5.0,
+                  speculative_execution=False),
+    )
+    spec = simulate_job(
+        P, S, C,
+        SimConfig(seed=3, straggler_prob=0.15, straggler_slowdown=5.0,
+                  speculative_execution=True),
+    )
+    base = simulate_job(P, S, C, SimConfig(seed=3))
+    assert slow.makespan > base.makespan
+    assert spec.num_speculative_launched > 0
+    assert spec.makespan <= slow.makespan
+
+
+def test_node_failure_requeues_and_completes():
+    base = simulate_job(P, S, C, SimConfig(seed=1, speculative_execution=False))
+    fail_t = base.map_finish_time * 0.5
+    failed = simulate_job(
+        P, S, C,
+        SimConfig(seed=1, node_failures=((fail_t, 0),),
+                  speculative_execution=False),
+    )
+    assert failed.num_failure_reruns > 0
+    assert failed.makespan > base.makespan
+    # Every map and reduce index completed exactly once (non-killed record).
+    done_maps = {r.index for r in failed.records if r.kind == "map" and not r.killed}
+    done_reds = {r.index for r in failed.records if r.kind == "reduce" and not r.killed}
+    assert done_maps == set(range(P.pNumMappers))
+    assert done_reds == set(range(P.pNumReducers))
+
+
+def test_map_only_job():
+    p0 = P.replace(pNumReducers=0)
+    r = simulate_job(p0, S, C, SimConfig(speculative_execution=False))
+    assert r.makespan == pytest.approx(r.map_finish_time)
+    assert all(rec.kind == "map" for rec in r.records)

@@ -1,0 +1,90 @@
+"""TPU analytical step model (paper-methodology adaptation): structural
+invariants + agreement with the compiled dry-run where artifacts exist."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.tpu_model import TpuCostFactors, TpuParams, step_model
+
+
+def test_train_cost_decreases_with_more_chips():
+    cfg = get_config("granite-3-8b")
+    shape = SHAPES["train_4k"]
+    small = step_model(cfg, shape, TpuParams(dp=8, tp=8, n_micro=8))
+    big = step_model(cfg, shape, TpuParams(dp=32, tp=16, n_micro=8))
+    assert big.compute_s < small.compute_s
+
+
+def test_backward_roughly_doubles_forward():
+    cfg = get_config("stablelm-1.6b")
+    train = step_model(cfg, SHAPES["train_4k"], TpuParams(remat=False))
+    fwd_fl = sum(p.flops for p in train.phases if not p.name.startswith(("bwd_", "optimizer")))
+    bwd_fl = sum(p.flops for p in train.phases if p.name.startswith("bwd_"))
+    assert 1.8 <= bwd_fl / fwd_fl <= 2.2
+
+
+def test_remat_adds_recompute():
+    cfg = get_config("stablelm-1.6b")
+    base = step_model(cfg, SHAPES["train_4k"], TpuParams(remat=False))
+    remat = step_model(cfg, SHAPES["train_4k"], TpuParams(remat=True))
+    assert remat.compute_s > base.compute_s
+    assert remat.compute_s < 1.6 * base.compute_s
+
+
+def test_moe_shuffle_appears_with_ep():
+    cfg = get_config("deepseek-moe-16b")
+    m = step_model(cfg, SHAPES["train_4k"], TpuParams(ep=16))
+    names = [p.name for p in m.phases]
+    assert "moe_shuffle" in names
+    no_ep = step_model(cfg, SHAPES["train_4k"], TpuParams(ep=1))
+    assert "moe_shuffle" not in [p.name for p in no_ep.phases]
+
+
+def test_decode_is_memory_bound():
+    cfg = get_config("granite-3-8b")
+    m = step_model(cfg, SHAPES["decode_32k"], TpuParams(n_micro=1))
+    assert m.bound in ("memory", "collective")
+    assert m.memory_s > m.compute_s
+
+
+def test_efficiency_factors_scale_terms():
+    cfg = get_config("gemma2-9b")
+    base = step_model(cfg, SHAPES["train_4k"], TpuParams())
+    fitted = step_model(
+        cfg, SHAPES["train_4k"], TpuParams(),
+        TpuCostFactors(eff_memory=10.0),
+    )
+    assert fitted.memory_s == pytest.approx(10.0 * base.memory_s)
+    assert fitted.compute_s == pytest.approx(base.compute_s)
+
+
+_ARTS = sorted(glob.glob("artifacts/dryrun/*__train_4k__single.json"))
+
+
+@pytest.mark.skipif(not _ARTS, reason="no dry-run artifacts")
+def test_compute_term_tracks_dryrun_for_dense_archs():
+    """E9 core claim: for dense architectures the analytical compute term
+    matches the compiled dry-run within 2x (it is within ~20% for most)."""
+    checked = 0
+    for f in _ARTS:
+        cell = json.load(open(f))
+        if cell.get("status") != "ok":
+            continue
+        cfg = get_config(cell["arch"])
+        if cfg.n_experts or "ssm" in cfg.layer_pattern or "rglru" in cfg.layer_pattern:
+            continue  # documented divergences (dense-MoE waste, scan archs)
+        shape = SHAPES[cell["shape"]]
+        m = step_model(
+            cfg, shape,
+            TpuParams(dp=16, tp=16, n_micro=cell.get("n_microbatches", 8)),
+        )
+        meas = cell["roofline"]["compute_s"]
+        # includes starcoder2: the divisibility-aware model charges the
+        # replicated 36-head attention (pred/meas = 1.05 at tp=16)
+        assert 0.5 < m.compute_s / meas < 2.0, (cell["arch"], m.compute_s, meas)
+        checked += 1
+    assert checked >= 4

@@ -1,0 +1,70 @@
+"""What-if engine + configuration tuner tests (the paper's use case)."""
+
+import numpy as np
+import pytest
+
+from repro.core.hadoop import CostFactors, HadoopParams, MiB, ProfileStats, job_model
+from repro.core.tuner import coordinate_descent, grid_search, random_search
+from repro.core.whatif import evaluate_grid, evaluate_product_grid
+
+P = HadoopParams(pNumNodes=8, pNumMappers=64, pNumReducers=16, pSplitSize=128 * MiB)
+S = ProfileStats(sMapSizeSel=0.8, sReduceSizeSel=0.5)
+C = CostFactors()
+
+SPACE = {
+    "pSortMB": [50.0, 100.0, 200.0, 400.0],
+    "pSortFactor": [5.0, 10.0, 25.0, 50.0],
+    "pNumReducers": [4.0, 8.0, 16.0, 32.0, 64.0],
+    "pIsIntermCompressed": [0.0, 1.0],
+}
+
+
+def test_evaluate_grid_matches_oracle_pointwise():
+    res = evaluate_grid(P, S, C, {"pSortMB": np.array([64.0, 128.0, 256.0])})
+    for i, v in enumerate([64.0, 128.0, 256.0]):
+        ref = job_model(P.replace(pSortMB=v), S, C)
+        assert res.total_cost[i] == pytest.approx(ref.totalCost, rel=1e-9)
+
+
+def test_product_grid_shape_and_validity():
+    res = evaluate_product_grid(P, S, C, SPACE)
+    n = 4 * 4 * 5 * 2
+    assert len(res.total_cost) == n
+    assert np.isfinite(res.total_cost).any()
+
+
+def test_grid_search_finds_global_min_of_grid():
+    res = evaluate_product_grid(P, S, C, SPACE)
+    best = grid_search(P, S, C, SPACE)
+    assert best.best_cost == pytest.approx(np.min(res.total_cost))
+
+
+def test_random_search_upper_bounds_grid_optimum():
+    g = grid_search(P, S, C, SPACE)
+    r = random_search(P, S, C, SPACE, samples=2048, seed=0)
+    assert r.best_cost >= g.best_cost - 1e-12
+    assert r.best_cost <= g.best_cost * 1.5  # dense sampling gets close
+
+
+def test_coordinate_descent_converges_to_grid_optimum():
+    g = grid_search(P, S, C, SPACE)
+    cd = coordinate_descent(P, S, C, SPACE)
+    assert cd.best_cost == pytest.approx(g.best_cost, rel=1e-6)
+    assert cd.evaluations < g.evaluations  # far fewer model evaluations
+
+
+def test_tuning_result_applies_to_params():
+    g = grid_search(P, S, C, SPACE)
+    tuned = g.apply(P)
+    assert isinstance(tuned.pSortFactor, int)
+    j_base = job_model(P, S, C)
+    j_tuned = job_model(tuned, S, C)
+    assert j_tuned.totalCost <= j_base.totalCost + 1e-9
+
+
+def test_compression_chosen_when_network_is_slow():
+    """Slow network -> tuner should enable intermediate compression."""
+    slow_net = C.replace(cNetworkCost=1e-7)  # ~10 MB/s
+    s = S.replace(sIntermCompressRatio=0.3)
+    g = grid_search(P, s, slow_net, SPACE)
+    assert g.best_assignment["pIsIntermCompressed"] == 1.0
