@@ -17,9 +17,9 @@ import numpy as np
 
 from repro.core.hadoop.params import HadoopParams, MiB
 from repro.core.hadoop.simulator import SimConfig, simulate_job
-from repro.core.tuner import coordinate_descent, grid_search
 from repro.mapreduce import JOBS, make_input
 from repro.mapreduce.profiler import fit_cost_factors, predict, run_measured
+from repro.search import ChunkedEvaluator, coordinate_descent_ev, grid_search_ev
 
 job = JOBS["wordcount"]
 N = 120_000
@@ -52,14 +52,16 @@ space = {
     "pNumReducers": [1, 2, 4, 8, 16],
     "pUseCombine": [0.0, 1.0],
 }
-tuned = coordinate_descent(default_hp, stats, costs, space)
-exhaustive = grid_search(default_hp, stats, costs, space)
+evaluator = ChunkedEvaluator(default_hp, stats, costs, chunk=1 << 10)
+tuned = coordinate_descent_ev(evaluator, space)
+exhaustive = grid_search_ev(evaluator, space)
 hp_tuned = tuned.apply(default_hp)
-print("\n== tuner (model evaluations only) ==")
+print("\n== tuner (model evaluations only, chunked/sharded evaluator) ==")
 print(f"  coordinate descent: {tuned.best_assignment} "
       f"cost={tuned.best_cost:.3f}s ({tuned.evaluations} evals)")
 print(f"  exhaustive optimum: cost={exhaustive.best_cost:.3f}s "
-      f"({exhaustive.evaluations} evals) -> descent within "
+      f"({exhaustive.evaluations} evals, "
+      f"{exhaustive.topk.configs_per_sec:,.0f} configs/s) -> descent within "
       f"{100 * tuned.best_cost / max(exhaustive.best_cost, 1e-9) - 100:.1f}%")
 
 # ---- 4: verify on the engine ----

@@ -16,30 +16,35 @@ import glob
 import json
 
 from repro.configs import SHAPES, get_config
-from repro.core.tpu_model import TpuParams, step_model
+from repro.search import TpuEvaluator, search_topk, space_size
 
-SPACE = [
-    (16, 16), (32, 8), (64, 4), (128, 2), (256, 1),
-]
-MICRO = [2, 4, 8, 16]
+SPACE = {
+    "dp": [16.0, 32.0, 64.0, 128.0, 256.0],
+    "tp": [16.0, 8.0, 4.0, 2.0, 1.0],
+    "n_micro": [2.0, 4.0, 8.0, 16.0],
+}
+N_CHIPS = 256
 
 
 def tune(arch: str, shape_name: str):
+    """Rank execution configs with the shared search stack: the TPU step
+    model behind the same Evaluator interface the Hadoop tuner uses.
+    Unshardable candidates (dp*tp != chips, indivisible batch) are rejected
+    by the evaluator's validity mask (cf. §Perf gemma2-prefill control)."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
+    ev = TpuEvaluator(cfg, shape, n_chips=N_CHIPS)
+    # k = every candidate, so the (16,16) baseline row is always present
+    top = search_topk(ev, SPACE, k=space_size(SPACE), exact_fallback=False)
     rows = []
-    for dp, tp in SPACE:
-        if shape.global_batch % dp:
-            continue                      # unshardable batch (cf. §Perf gemma2-prefill control)
-        for nm in MICRO:
-            if (shape.global_batch // dp) % nm and nm != 1:
-                continue
-            m = step_model(cfg, shape, TpuParams(
-                dp=dp, tp=tp, n_micro=nm,
-                ep=tp if cfg.n_experts and cfg.n_experts % tp == 0 else 1,
-            ))
-            rows.append(((dp, tp, nm), m.overlap_s, m.bound))
-    rows.sort(key=lambda r: r[1])
+    for e in top.entries:
+        dp, tp, nm = (int(e.assignment[k]) for k in ("dp", "tp", "n_micro"))
+        # which resource bounds this config, from the evaluator's own outputs
+        # (same ep policy as the ranking itself)
+        out = ev.evaluate({k: [v] for k, v in e.assignment.items()}).outputs
+        bound = max(("compute", "memory", "collective"),
+                    key=lambda t: out[f"{t}_s"][0])
+        rows.append(((dp, tp, nm), e.cost, bound))
     return rows
 
 

@@ -1,121 +1,23 @@
-"""Configuration tuner — the paper's "find the optimal configuration" use case.
+"""Configuration tuner — the paper's "find the optimal configuration" case.
 
-Three strategies over the Hadoop parameter space, all driven by the
-vectorized what-if engine so the model itself is never the bottleneck:
+The strategies now live in :mod:`repro.search.strategies`, running on the
+chunked/sharded evaluator (:class:`repro.search.ChunkedEvaluator`) so the
+same code drives the Hadoop job model and the TPU step model
+(:mod:`repro.search.tpu`).  This module keeps the seed import path:
 
-* :func:`grid_search`          — exhaustive Cartesian product (exact optimum
-  inside the grid; used as the oracle in ``bench_tuner``).
+* :func:`grid_search`          — exhaustive Cartesian product, streamed with
+  on-device top-k (exact optimum inside the grid; oracle in ``bench_tuner``).
 * :func:`random_search`        — uniform sampling of the space.
-* :func:`coordinate_descent`   — iterate per-parameter sweeps to a fixpoint;
-  converges in a handful of model evaluations and, on the benchmark spaces,
-  reaches the grid optimum (coordinate-wise quasi-convexity holds for the
-  cost model in practice).
-
-The same interfaces are reused by the TPU-side tuner
-(:mod:`repro.core.tpu_model`) with a different cost function — the paper's
-methodology transplanted to sharding/microbatch configuration.
+* :func:`coordinate_descent`   — iterate per-parameter sweeps to a fixpoint.
 """
 
 from __future__ import annotations
 
-import random as _random
-from dataclasses import dataclass, field
-from typing import Mapping, Sequence
-
-import numpy as np
-
-from .hadoop.params import CostFactors, HadoopParams, ProfileStats
-from .whatif import evaluate_grid, evaluate_product_grid
+from repro.search.strategies import (
+    TuningResult,
+    coordinate_descent,
+    grid_search,
+    random_search,
+)
 
 __all__ = ["TuningResult", "grid_search", "random_search", "coordinate_descent"]
-
-
-@dataclass
-class TuningResult:
-    best_assignment: dict[str, float]
-    best_cost: float
-    evaluations: int
-    history: list[tuple[dict[str, float], float]] = field(default_factory=list)
-
-    def apply(self, p: HadoopParams) -> HadoopParams:
-        """Materialize the winning assignment onto a HadoopParams object."""
-        kw = {}
-        for k, v in self.best_assignment.items():
-            if k in p.__dataclass_fields__:
-                f = p.__dataclass_fields__[k]
-                if f.type in ("int", int):
-                    kw[k] = int(round(v))
-                elif f.type in ("bool", bool):
-                    kw[k] = bool(round(v))
-                else:
-                    kw[k] = float(v)
-        return p.replace(**kw)
-
-
-def grid_search(
-    p: HadoopParams,
-    s: ProfileStats,
-    c: CostFactors,
-    space: Mapping[str, Sequence[float]],
-) -> TuningResult:
-    res = evaluate_product_grid(p, s, c, space)
-    i, cost, assign = res.best()
-    return TuningResult(assign, cost, evaluations=len(res.total_cost))
-
-
-def random_search(
-    p: HadoopParams,
-    s: ProfileStats,
-    c: CostFactors,
-    space: Mapping[str, Sequence[float]],
-    *,
-    samples: int = 4096,
-    seed: int = 0,
-) -> TuningResult:
-    rng = _random.Random(seed)
-    keys = list(space.keys())
-    overrides = {
-        k: np.asarray([rng.choice(list(space[k])) for _ in range(samples)])
-        for k in keys
-    }
-    res = evaluate_grid(p, s, c, overrides)
-    i, cost, assign = res.best()
-    return TuningResult(assign, cost, evaluations=samples)
-
-
-def coordinate_descent(
-    p: HadoopParams,
-    s: ProfileStats,
-    c: CostFactors,
-    space: Mapping[str, Sequence[float]],
-    *,
-    max_rounds: int = 8,
-) -> TuningResult:
-    keys = list(space.keys())
-    # Start from the mid-point of every axis.
-    assign = {k: float(space[k][len(space[k]) // 2]) for k in keys}
-    evals = 0
-    history: list[tuple[dict[str, float], float]] = []
-    best_cost = np.inf
-
-    for _ in range(max_rounds):
-        changed = False
-        for k in keys:
-            cand = np.asarray(list(space[k]), dtype=np.float64)
-            overrides: dict[str, np.ndarray] = {k: cand}
-            for k2 in keys:
-                if k2 != k:
-                    overrides[k2] = np.full(len(cand), assign[k2])
-            res = evaluate_grid(p, s, c, overrides)
-            evals += len(cand)
-            i = int(np.argmin(res.total_cost))
-            if res.total_cost[i] < best_cost - 1e-12:
-                best_cost = float(res.total_cost[i])
-                if assign[k] != float(cand[i]):
-                    assign[k] = float(cand[i])
-                    changed = True
-            history.append((dict(assign), best_cost))
-        if not changed:
-            break
-
-    return TuningResult(dict(assign), float(best_cost), evals, history)

@@ -1,54 +1,42 @@
 """What-if engine: vectorized evaluation of the job model over config grids.
 
-The paper's models exist to answer *what-if* questions ("what happens to job
-cost if ``io.sort.mb`` doubles and compression is enabled?") and to search
-the configuration space.  The JAX formulation (:mod:`repro.core.hadoop.model`)
-makes this massively parallel: a single ``jit(vmap(job_model_jnp))`` call
-evaluates ~10^5-10^6 full job models at once — the engine the tuner and the
-``bench_whatif`` benchmark build on.
+The engine now lives in :mod:`repro.search` — a chunked, padded, device-
+sharded evaluator with streaming top-k and an exact-simulator escape hatch
+for ``valid == 0`` configs.  This module keeps the seed API:
+
+* :class:`WhatIfResult` (= :class:`repro.search.SearchResult`) — batched
+  outputs + overrides; ``best()`` raises :class:`InvalidGridError` on an
+  all-invalid grid instead of silently returning index 0.
+* :func:`evaluate_grid` — parameters swept as (B,) arrays.
+* :func:`evaluate_product_grid` — streamed Cartesian sweep.
 """
 
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass
 from typing import Any, Mapping, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .hadoop.model import job_model_jnp, pack_config
+from repro.search.evaluator import (
+    ChunkedEvaluator,
+    InvalidGridError,
+    SearchResult,
+    cached_evaluator,
+    evaluate_unchunked,
+)
+from repro.search.grid import iter_blocks
+
 from .hadoop.params import CostFactors, HadoopParams, ProfileStats
 
-__all__ = ["WhatIfResult", "evaluate_grid", "evaluate_product_grid"]
+__all__ = [
+    "WhatIfResult",
+    "InvalidGridError",
+    "evaluate_grid",
+    "evaluate_product_grid",
+]
 
-
-@dataclass
-class WhatIfResult:
-    """Batched model outputs plus the override grid that produced them."""
-
-    overrides: dict[str, np.ndarray]    # key -> (B,) values
-    outputs: dict[str, np.ndarray]      # model key -> (B,) values
-    total_cost: np.ndarray              # (B,) seconds (inf where invalid)
-
-    def best(self) -> tuple[int, float, dict[str, float]]:
-        """Index, cost and override assignment of the cheapest valid config."""
-        i = int(np.argmin(self.total_cost))
-        return i, float(self.total_cost[i]), {
-            k: float(v[i]) for k, v in self.overrides.items()
-        }
-
-
-@jax.jit
-def _eval_batched(cfg: dict) -> dict:
-    batched = {k: v for k, v in cfg.items() if jnp.ndim(v) > 0}
-    static = {k: v for k, v in cfg.items() if jnp.ndim(v) == 0}
-
-    def one(b):
-        return job_model_jnp({**static, **b})
-
-    return jax.vmap(one)(batched)
+# The seed name; one dataclass serves both the legacy and search APIs.
+WhatIfResult = SearchResult
 
 
 def evaluate_grid(
@@ -56,34 +44,21 @@ def evaluate_grid(
     s: ProfileStats,
     c: CostFactors,
     overrides: Mapping[str, Any],
+    *,
+    chunk: int | None = None,
+    evaluator: ChunkedEvaluator | None = None,
 ) -> WhatIfResult:
     """Evaluate the job model with some parameters swept as (B,) arrays.
 
     ``overrides`` maps config keys (any field of the three dataclasses) to a
     1-D array of values; all arrays must have the same length B.  Scalar
-    overrides are allowed and applied unbatched.
+    overrides are allowed and applied unbatched.  Evaluation streams through
+    the chunked sharded evaluator (bit-for-bit equal to the seed's single
+    ``jit(vmap(...))`` call).
     """
-    cfg = pack_config(p, s, c)
-    n = None
-    ov_arrays: dict[str, np.ndarray] = {}
-    for k, v in overrides.items():
-        if k not in cfg:
-            raise KeyError(f"unknown config key: {k!r}")
-        arr = jnp.asarray(v, dtype=cfg[k].dtype)
-        if arr.ndim > 0:
-            if n is None:
-                n = arr.shape[0]
-            elif arr.shape[0] != n:
-                raise ValueError("all batched overrides must share a length")
-            ov_arrays[k] = np.asarray(arr)
-        cfg[k] = arr
-    if n is None:
-        raise ValueError("at least one override must be batched")
-
-    out = _eval_batched(cfg)
-    out_np = {k: np.asarray(v) for k, v in out.items()}
-    total = np.where(out_np["valid"] > 0, out_np["j_totalCost"], np.inf)
-    return WhatIfResult(overrides=ov_arrays, outputs=out_np, total_cost=total)
+    if evaluator is None:
+        evaluator = cached_evaluator(p, s, c, chunk)
+    return evaluator.evaluate(overrides)
 
 
 def evaluate_product_grid(
@@ -92,41 +67,26 @@ def evaluate_product_grid(
     c: CostFactors,
     space: Mapping[str, Sequence[float]],
     *,
-    chunk: int = 1 << 16,
+    chunk: int = 1 << 13,
+    evaluator: ChunkedEvaluator | None = None,
 ) -> WhatIfResult:
     """Cartesian-product sweep over ``space`` (key -> candidate values).
 
-    The product is materialized lazily and evaluated in chunks so arbitrarily
-    large grids stream through the jitted batched model.
+    The product is never materialized: index blocks stream through the
+    fixed-size chunked evaluator, so arbitrarily large grids run in bounded
+    device memory with a single XLA compile.  (For 10^5+-config spaces
+    prefer :func:`repro.search.search_topk`, which keeps only the top-k
+    instead of returning every output column.)
     """
-    keys = list(space.keys())
-    combos = itertools.product(*[space[k] for k in keys])
-    all_over: dict[str, list] = {k: [] for k in keys}
-    all_out: dict[str, list] = {}
-    totals: list[np.ndarray] = []
-
-    def flush(block: list[tuple]) -> None:
-        if not block:
-            return
-        cols = list(zip(*block))
-        ov = {k: np.asarray(col, dtype=np.float64) for k, col in zip(keys, cols)}
-        res = evaluate_grid(p, s, c, ov)
-        for k in keys:
-            all_over[k].append(ov[k])
-        for k, v in res.outputs.items():
-            all_out.setdefault(k, []).append(v)
-        totals.append(res.total_cost)
-
-    block: list[tuple] = []
-    for combo in combos:
-        block.append(combo)
-        if len(block) >= chunk:
-            flush(block)
-            block = []
-    flush(block)
-
+    if evaluator is None:
+        evaluator = cached_evaluator(p, s, c, chunk)
+    parts: list[WhatIfResult] = [
+        evaluator.evaluate(cols) for _, cols in iter_blocks(space, evaluator.chunk)
+    ]
     return WhatIfResult(
-        overrides={k: np.concatenate(v) for k, v in all_over.items()},
-        outputs={k: np.concatenate(v) for k, v in all_out.items()},
-        total_cost=np.concatenate(totals),
+        overrides={k: np.concatenate([r.overrides[k] for r in parts])
+                   for k in parts[0].overrides},
+        outputs={k: np.concatenate([r.outputs[k] for r in parts])
+                 for k in parts[0].outputs},
+        total_cost=np.concatenate([r.total_cost for r in parts]),
     )

@@ -28,7 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_tpu_compiler_params
 
 __all__ = ["seg_combine_kernel", "seg_combine_pallas"]
 
@@ -77,7 +78,7 @@ def seg_combine_pallas(
         ],
         out_specs=pl.BlockSpec((num_parts, block_d), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((num_parts, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -27,8 +27,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 __all__ = ["wordcount_map_jax", "identity_map_jax", "mapreduce_pipeline", "make_pipeline"]
 

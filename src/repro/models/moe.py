@@ -18,6 +18,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 from .act_sharding import constrain
 from .config import ModelConfig
 from .layers import apply_mlp, init_mlp
@@ -294,7 +296,7 @@ def _expert_compute_shardmap(p, cfg, x, idx, gate_vals, capacity, dtype):
     batch_axes = ("pod", "data") if "pod" in mesh.axis_names else "data"
     bspec = P(batch_axes, None, None)
     espec = P("model", None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         block,
         mesh=mesh,
         in_specs=(bspec, bspec, bspec, espec, espec, espec),

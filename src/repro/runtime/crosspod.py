@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.optim.compress import compress_grads, decompress_grads
 
 __all__ = ["crosspod_reduce"]
@@ -70,7 +71,7 @@ def crosspod_reduce(grads, err, mesh: Mesh, *, method: str = "bf16", axis: str =
     # Each leaf is replicated over the pod axis (pjit already reduced the
     # within-pod axes); shard_map sees the per-pod local view.
     rep = P()
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh, in_specs=(rep, rep), out_specs=(rep, rep),
         check_vma=False,
     )

@@ -1,0 +1,74 @@
+"""repro.search — the config-search subsystem.
+
+The paper exists to answer what-if questions and find optimal
+configurations.  This package is the platform for that at production scale:
+
+* :mod:`~repro.search.grid`       — streaming Cartesian spaces (no
+  materialized 10^6-row products).
+* :mod:`~repro.search.evaluator`  — chunked, padded, device-sharded batched
+  model evaluation (one XLA compile per key-set; bit-for-bit equal to the
+  unchunked path) + the ``valid == 0`` -> exact-simulator escape hatch.
+* :mod:`~repro.search.topk`       — streaming on-device top-k merging.
+* :mod:`~repro.search.strategies` — grid / random / coordinate-descent
+  search over any evaluator.
+* :mod:`~repro.search.tpu`        — the TPU step model behind the same
+  evaluator interface.
+
+jax version drift (``shard_map`` et al.) is handled by :mod:`repro.compat`.
+The seed modules ``repro.core.whatif`` and ``repro.core.tuner`` remain as
+thin aliases of this package.
+"""
+
+from .evaluator import (
+    BlockTopK,
+    ChunkedEvaluator,
+    Evaluator,
+    InvalidGridError,
+    SearchResult,
+    apply_assignment,
+    cached_evaluator,
+    evaluate_unchunked,
+)
+from .grid import assignment_at, iter_blocks, sample_space, space_block, space_size
+from .strategies import (
+    TuningResult,
+    coordinate_descent,
+    coordinate_descent_ev,
+    grid_search,
+    grid_search_ev,
+    random_search,
+    random_search_ev,
+    search_topk,
+)
+from .topk import TopKAccumulator, TopKEntry, TopKResult
+from .tpu import TpuEvaluator, mesh_space, tune_tpu
+
+__all__ = [
+    "InvalidGridError",
+    "SearchResult",
+    "BlockTopK",
+    "Evaluator",
+    "ChunkedEvaluator",
+    "cached_evaluator",
+    "evaluate_unchunked",
+    "apply_assignment",
+    "space_size",
+    "space_block",
+    "iter_blocks",
+    "sample_space",
+    "assignment_at",
+    "TopKEntry",
+    "TopKResult",
+    "TopKAccumulator",
+    "TuningResult",
+    "search_topk",
+    "grid_search",
+    "grid_search_ev",
+    "random_search",
+    "random_search_ev",
+    "coordinate_descent",
+    "coordinate_descent_ev",
+    "TpuEvaluator",
+    "mesh_space",
+    "tune_tpu",
+]

@@ -1,0 +1,396 @@
+"""Chunked, sharded, jit-cache-friendly batched config evaluation.
+
+The what-if engine answers the paper's questions by evaluating the analytic
+job model (:func:`repro.core.hadoop.model.job_model_jnp`) over *grids* of
+configurations.  The seed implementation materialized the whole grid in one
+``jit(vmap(...))`` call — one compile per grid size, everything on one
+device.  :class:`ChunkedEvaluator` replaces it with a streaming design:
+
+* **Fixed-size padded chunks** — every batch is padded (edge-replicated) to
+  one static ``chunk`` length, so XLA compiles exactly once per swept
+  key-set no matter how the grid size varies (bounded device memory, no
+  recompiles).
+* **Device sharding** — each chunk is split across all available devices
+  with ``shard_map`` over a 1-D ``search`` mesh (via :mod:`repro.compat`,
+  which papers over the 0.4.x/0.6+ API drift).  Rows are independent, so
+  the chunked/sharded results are bit-for-bit identical to the unchunked
+  single-device path (asserted by tests and ``benchmarks/bench_whatif``).
+* **On-device top-k** — ``chunk_topk`` reduces each chunk to its ``k`` best
+  (and ``k`` best *invalid*) candidates on device, so a 10^6-config search
+  transfers k values per chunk to the host instead of the whole grid.
+* **Invalid-config escape hatch** — configs with ``valid == 0`` (closed-form
+  merge math out of domain, paper §2.3) are *not* silently ``inf``: top-k
+  survivors are routed to :meth:`exact_cost`, the task-scheduler simulator
+  (:mod:`repro.core.hadoop.simulator`) whose per-task costs use the exact
+  merge simulation.
+
+The same interface is implemented by :class:`repro.search.tpu.TpuEvaluator`
+for the TPU-side tuner, so every strategy in
+:mod:`repro.search.strategies` runs against either cost model.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.hadoop.model import job_model_jnp, pack_config
+from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
+from repro.core.hadoop.simulator import SimConfig, simulate_job
+
+__all__ = [
+    "InvalidGridError",
+    "SearchResult",
+    "BlockTopK",
+    "Evaluator",
+    "ChunkedEvaluator",
+    "cached_evaluator",
+    "evaluate_unchunked",
+    "apply_assignment",
+]
+
+
+class InvalidGridError(ValueError):
+    """Every configuration in the evaluated grid was invalid (no finite cost)."""
+
+
+@dataclass
+class SearchResult:
+    """Batched model outputs plus the override grid that produced them."""
+
+    overrides: dict[str, np.ndarray]    # key -> (B,) values
+    outputs: dict[str, np.ndarray]      # model key -> (B,) values
+    total_cost: np.ndarray              # (B,) seconds (inf where invalid)
+
+    def best(self) -> tuple[int, float, dict[str, float]]:
+        """Index, cost and override assignment of the cheapest valid config.
+
+        Raises :class:`InvalidGridError` if no config is valid — the seed
+        version silently returned index 0 (an invalid config) in that case.
+        """
+        if self.total_cost.size == 0 or not np.isfinite(self.total_cost).any():
+            raise InvalidGridError(
+                "no valid configuration in the grid (all costs are inf); "
+                "use repro.search.search_topk(exact_fallback=True) to route "
+                "invalid configs through the exact simulator instead"
+            )
+        i = int(np.argmin(self.total_cost))
+        return i, float(self.total_cost[i]), {
+            k: float(v[i]) for k, v in self.overrides.items()
+        }
+
+
+def _coerce_field(dc, name: str, value: float):
+    f = dc.__dataclass_fields__[name]
+    if f.type in ("int", int):
+        return int(round(value))
+    if f.type in ("bool", bool):
+        return bool(round(value))
+    return float(value)
+
+
+def apply_assignment(
+    p: HadoopParams,
+    s: ProfileStats,
+    c: CostFactors,
+    assignment: Mapping[str, float],
+) -> tuple[HadoopParams, ProfileStats, CostFactors]:
+    """Route a flat {config key: value} assignment onto the three parameter
+    dataclasses with proper int/bool coercion."""
+    out = []
+    for dc in (p, s, c):
+        kw = {
+            k: _coerce_field(dc, k, v)
+            for k, v in assignment.items()
+            if k in dc.__dataclass_fields__
+        }
+        out.append(dc.replace(**kw) if kw else dc)
+    return tuple(out)
+
+
+@dataclass
+class BlockTopK:
+    """Per-block top-k reduction: k cheapest valid rows, k cheapest invalid
+    rows (candidates for the exact escape hatch), and the block valid count.
+    Indices are block-local."""
+
+    costs: np.ndarray
+    idx: np.ndarray
+    inv_costs: np.ndarray
+    inv_idx: np.ndarray
+    n_valid: int
+
+
+class Evaluator:
+    """Interface every search backend implements.
+
+    ``evaluate`` returns full per-config outputs; ``chunk_topk`` reduces one
+    block to its best candidates; ``exact_cost`` (optional) is the escape
+    hatch for ``valid == 0`` survivors.  The base class provides a numpy
+    ``chunk_topk`` on top of ``evaluate``; accelerator-backed evaluators
+    override it with an on-device reduction.
+    """
+
+    chunk: int = 4096
+
+    def evaluate(self, overrides: Mapping[str, Any]) -> SearchResult:
+        raise NotImplementedError
+
+    def evaluate_small(self, overrides: Mapping[str, Any]) -> SearchResult:
+        """Hook for tiny ad-hoc batches; backends with padded fixed-size
+        batches override this with an unpadded path."""
+        return self.evaluate(overrides)
+
+    def exact_cost(self, assignment: Mapping[str, float]) -> float | None:
+        return None
+
+    def chunk_topk(self, overrides: Mapping[str, np.ndarray], k: int) -> "BlockTopK":
+        """Top-k of one block: the k cheapest valid configs and the k
+        cheapest invalid configs (ranked by raw model cost)."""
+        res = self.evaluate(overrides)
+        valid = res.outputs["valid"] > 0
+        raw = np.nan_to_num(
+            res.outputs[self.cost_key], nan=np.inf, posinf=np.inf, neginf=np.inf
+        )
+        cost = np.where(valid, raw, np.inf)
+        inv = np.where(~valid, raw, np.inf)
+        kk = min(k, cost.size)
+        idx = np.argsort(cost, kind="stable")[:kk]
+        inv_idx = np.argsort(inv, kind="stable")[:kk]
+        return BlockTopK(cost[idx], idx, inv[inv_idx], inv_idx, int(valid.sum()))
+
+    @property
+    def cost_key(self) -> str:
+        return "j_totalCost"
+
+
+def evaluate_unchunked(
+    base_cfg: dict,
+    overrides: Mapping[str, jnp.ndarray],
+    model_fn: Callable[[dict], dict] = job_model_jnp,
+) -> dict:
+    """Single-device single-call ``jit(vmap(model))`` — the seed path.
+
+    Kept as the bit-for-bit reference the chunked/sharded path is verified
+    against (tests + ``bench_whatif``).  Compiles once per batch *size*.
+    """
+    cfg = dict(base_cfg)
+    cfg.update({k: jnp.asarray(v) for k, v in overrides.items()})
+    out = _unchunked_jit(model_fn)(cfg)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+@functools.lru_cache(maxsize=None)
+def _unchunked_jit(model_fn):
+    @jax.jit
+    def run(cfg: dict) -> dict:
+        batched = {k: v for k, v in cfg.items() if jnp.ndim(v) > 0}
+        static = {k: v for k, v in cfg.items() if jnp.ndim(v) == 0}
+        return jax.vmap(lambda b: model_fn({**static, **b}))(batched)
+
+    return run
+
+
+class ChunkedEvaluator(Evaluator):
+    """Streaming sharded evaluator over the Hadoop job model.
+
+    Parameters
+    ----------
+    p, s, c : the base configuration (any field may be overridden per-row).
+    chunk   : static rows per evaluation call (rounded up to a multiple of
+              the device count).  One XLA compile per swept key-set.
+    devices : devices to shard chunks over (default: all local devices).
+    model_fn: batched model, flat cfg dict -> flat outputs dict; must emit
+              ``j_totalCost`` and ``valid``.
+    """
+
+    def __init__(
+        self,
+        p: HadoopParams,
+        s: ProfileStats,
+        c: CostFactors,
+        *,
+        chunk: int = 1 << 13,
+        devices=None,
+        model_fn: Callable[[dict], dict] = job_model_jnp,
+    ):
+        self._psc = (p, s, c)
+        #: packed base config (flat key -> jnp scalar); public so callers can
+        #: drive evaluate_unchunked against the exact same base
+        self.base_cfg = pack_config(p, s, c)
+        self._model_fn = model_fn
+        devs = list(devices) if devices is not None else compat.default_search_devices()
+        self.num_devices = len(devs)
+        self.chunk = -(-max(chunk, 1) // self.num_devices) * self.num_devices
+        self._mesh = compat.make_mesh(devs, axis="search")
+
+        body = self._sharded_body()
+        self._eval_fn = jax.jit(body)
+        self._topk_fn = jax.jit(
+            functools.partial(self._topk_body, body), static_argnames=("k",)
+        )
+
+    # ---------------- compiled bodies ----------------
+
+    def _sharded_body(self):
+        model_fn = self._model_fn
+        mesh = self._mesh
+
+        def per_device(batched, static):
+            return jax.vmap(lambda b: model_fn({**static, **b}))(batched)
+
+        return compat.shard_map(
+            per_device,
+            mesh=mesh,
+            in_specs=(P("search"), P()),
+            out_specs=P("search"),
+            check_vma=False,
+        )
+
+    def _topk_body(self, body, batched, static, mask, *, k):
+        out = body(batched, static)
+        raw = jnp.nan_to_num(
+            out[self.cost_key], nan=jnp.inf, posinf=jnp.inf, neginf=jnp.inf
+        )
+        live = mask > 0
+        valid = (out["valid"] > 0) & live
+        cost = jnp.where(valid, raw, jnp.inf)
+        inv = jnp.where(~(out["valid"] > 0) & live, raw, jnp.inf)
+        neg_c, idx = jax.lax.top_k(-cost, k)
+        neg_i, inv_idx = jax.lax.top_k(-inv, k)
+        return -neg_c, idx, -neg_i, inv_idx, jnp.sum(valid)
+
+    # ---------------- padding / packing ----------------
+
+    def _split(self, overrides: Mapping[str, Any]):
+        """Validate + cast overrides; split into batched columns and scalar
+        (static) overrides merged onto the base config."""
+        static = dict(self.base_cfg)
+        batched: dict[str, np.ndarray] = {}
+        n = None
+        for k, v in overrides.items():
+            if k not in self.base_cfg:
+                raise KeyError(f"unknown config key: {k!r}")
+            arr = jnp.asarray(v, dtype=self.base_cfg[k].dtype)
+            if arr.ndim > 1:
+                raise ValueError(f"override {k!r} must be scalar or 1-D")
+            if arr.ndim == 1:
+                if n is None:
+                    n = arr.shape[0]
+                elif arr.shape[0] != n:
+                    raise ValueError("all batched overrides must share a length")
+                batched[k] = np.asarray(arr)
+            else:
+                static[k] = arr
+        if n is None:
+            raise ValueError("at least one override must be batched")
+        if n == 0:
+            raise ValueError("batched overrides are empty (0-length grid)")
+        return batched, static, n
+
+    def _pad(self, batched: Mapping[str, np.ndarray], start: int, stop: int):
+        """One (chunk,)-padded slice [start, stop): edge-replicated values +
+        liveness mask.  Static shape => one compile for any grid size."""
+        n = stop - start
+        pad = self.chunk - n
+        cols = {}
+        for k, v in batched.items():
+            sl = v[start:stop]
+            cols[k] = np.concatenate([sl, np.full(pad, sl[-1], dtype=sl.dtype)]) \
+                if pad else sl
+        mask = np.zeros(self.chunk, dtype=bool)
+        mask[:n] = True
+        return cols, mask
+
+    # ---------------- public API ----------------
+
+    def evaluate(self, overrides: Mapping[str, Any]) -> SearchResult:
+        """Full outputs for every row, streamed through fixed-size chunks.
+
+        Bit-for-bit identical to :func:`evaluate_unchunked` on the same
+        overrides (padding rows are computed but dropped here).
+        """
+        batched, static, n = self._split(overrides)
+        out_blocks: dict[str, list[np.ndarray]] = {}
+        for start in range(0, n, self.chunk):
+            stop = min(start + self.chunk, n)
+            cols, _ = self._pad(batched, start, stop)
+            out = self._eval_fn(cols, static)
+            for k, v in out.items():
+                out_blocks.setdefault(k, []).append(np.asarray(v)[: stop - start])
+        outputs = {k: np.concatenate(v) for k, v in out_blocks.items()}
+        total = np.where(outputs["valid"] > 0, outputs[self.cost_key], np.inf)
+        return SearchResult(overrides=batched, outputs=outputs, total_cost=total)
+
+    def evaluate_small(self, overrides: Mapping[str, Any]) -> SearchResult:
+        """Tiny ad-hoc batches without padding to the full chunk: rows are
+        padded to the next power of two instead, so compiles stay bounded
+        (one per bucket) while the evaluated-row waste stays < 2x.  Batches
+        at or beyond the chunk size take the normal chunked path.
+
+        Note: for *repeated* small sweeps (coordinate descent) the chunked
+        :meth:`evaluate` is usually faster end-to-end — its one executable
+        is already compiled, and padded rows are cheaper than a retrace."""
+        batched, static, n = self._split(overrides)
+        if n >= self.chunk:
+            return self.evaluate(overrides)
+        bucket = 1 << (n - 1).bit_length() if n > 1 else 1
+        padded = {
+            k: np.concatenate([v, np.full(bucket - n, v[-1], dtype=v.dtype)])
+            for k, v in batched.items()
+        }
+        out = evaluate_unchunked(static, padded, self._model_fn)
+        out = {k: v[:n] for k, v in out.items()}
+        total = np.where(out["valid"] > 0, out[self.cost_key], np.inf)
+        return SearchResult(overrides=batched, outputs=out, total_cost=total)
+
+    def chunk_topk(self, overrides: Mapping[str, np.ndarray], k: int) -> BlockTopK:
+        """On-device top-k of one block (k cheapest valid / invalid rows);
+        only 2k scalars + indices come back to the host."""
+        batched, static, n = self._split(overrides)
+        if n > self.chunk:
+            raise ValueError(f"block of {n} rows exceeds chunk={self.chunk}")
+        cols, mask = self._pad(batched, 0, n)
+        kk = min(k, self.chunk)
+        costs, idx, inv_c, inv_i, n_valid = self._topk_fn(cols, static, mask, k=kk)
+        return BlockTopK(
+            np.asarray(costs), np.asarray(idx),
+            np.asarray(inv_c), np.asarray(inv_i), int(n_valid),
+        )
+
+    def exact_cost(self, assignment: Mapping[str, float]) -> float:
+        """Escape hatch for ``valid == 0``: exact task-scheduler simulation
+        (paper §5 way (i)); its per-task merge accounting uses the exact
+        merge simulation, so it has no closed-form domain restriction."""
+        p2, s2, c2 = apply_assignment(*self._psc, assignment)
+        return float(simulate_job(p2, s2, c2, SimConfig()).makespan)
+
+    # compile-cache introspection (used by tests/bench to prove chunking
+    # keeps one compile across grid sizes)
+    def eval_cache_size(self) -> int:
+        return self._eval_fn._cache_size()
+
+    def topk_cache_size(self) -> int:
+        return self._topk_fn._cache_size()
+
+
+# The parameter dataclasses are frozen (hashable), so repeated calls through
+# the legacy whatif/tuner APIs with the same base config reuse one evaluator
+# — and with it the compiled chunk executables, matching the seed's
+# module-level jit cache.
+@functools.lru_cache(maxsize=16)
+def cached_evaluator(
+    p: HadoopParams,
+    s: ProfileStats,
+    c: CostFactors,
+    chunk: int | None = None,
+) -> ChunkedEvaluator:
+    kw = {} if chunk is None else {"chunk": chunk}
+    return ChunkedEvaluator(p, s, c, **kw)

@@ -1,0 +1,140 @@
+"""Streaming top-k accumulation across evaluator blocks.
+
+Each block is reduced on device to its k cheapest valid rows and k cheapest
+invalid rows (:class:`repro.search.evaluator.BlockTopK`); this module merges
+those per-block winners into one global ranking, and applies the invalid
+escape hatch: when fewer than ``k`` valid configs exist, the best invalid
+candidates are re-costed through the evaluator's ``exact_cost`` path (the
+task-scheduler simulator for the Hadoop model) instead of reporting ``inf``.
+
+Merging is deterministic: ties in cost resolve to the lower global index,
+so streamed results agree with a full numpy ``argsort`` oracle (tested).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping
+
+import numpy as np
+
+from .evaluator import BlockTopK, Evaluator, InvalidGridError
+
+__all__ = ["TopKEntry", "TopKResult", "TopKAccumulator"]
+
+
+@dataclass
+class TopKEntry:
+    # Offset into the streamed candidate sequence: the flat product index
+    # for grid searches (usable with grid.assignment_at), the sample index
+    # for random search.  `assignment` is always the authoritative config.
+    index: int
+    cost: float                     # seconds (exact-sim seconds if exact)
+    assignment: dict[str, float]    # swept key -> value at this config
+    valid: bool                     # closed-form model applicable?
+    exact: bool = False             # costed via the exact simulator path
+
+
+@dataclass
+class TopKResult:
+    entries: list[TopKEntry]        # sorted: valid by cost, then exact-costed
+    k: int
+    n_evaluated: int
+    n_valid: int
+    elapsed_s: float = 0.0
+
+    def best(self) -> TopKEntry:
+        if not self.entries:
+            raise InvalidGridError(
+                "search produced no rankable configuration (no valid configs "
+                "and no exact_cost escape hatch on this evaluator)"
+            )
+        return self.entries[0]
+
+    @property
+    def configs_per_sec(self) -> float:
+        return self.n_evaluated / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
+
+@dataclass
+class _Cands:
+    """One running candidate pool (cost-ascending, ties by global index)."""
+
+    costs: np.ndarray = field(default_factory=lambda: np.empty(0))
+    gidx: np.ndarray = field(default_factory=lambda: np.empty(0, dtype=np.int64))
+    assigns: list = field(default_factory=list)
+
+    def merge(self, k: int, costs, gidx, assigns) -> None:
+        allc = np.concatenate([self.costs, costs])
+        alli = np.concatenate([self.gidx, gidx])
+        alla = self.assigns + assigns
+        finite = np.isfinite(allc)
+        order = np.lexsort((alli[finite], allc[finite]))[:k]
+        self.costs = allc[finite][order]
+        self.gidx = alli[finite][order]
+        fa = [a for a, f in zip(alla, finite) if f]
+        self.assigns = [fa[i] for i in order]
+
+
+class TopKAccumulator:
+    """Merge per-block :class:`BlockTopK` reductions into a global top-k."""
+
+    def __init__(self, k: int):
+        self.k = k
+        self._valid = _Cands()
+        self._invalid = _Cands()
+        self.n_evaluated = 0
+        self.n_valid = 0
+
+    def update(
+        self, start: int, cols: Mapping[str, np.ndarray], block: BlockTopK
+    ) -> None:
+        """Fold one block's winners in (``start`` = its global offset)."""
+        n_rows = len(next(iter(cols.values())))
+        self.n_evaluated += n_rows
+        self.n_valid += block.n_valid
+
+        def pick(costs, idx, pool: _Cands):
+            keep = np.isfinite(costs)
+            li = idx[keep]
+            assigns = [
+                {k: float(v[i]) for k, v in cols.items()} for i in li
+            ]
+            pool.merge(self.k, costs[keep], start + li.astype(np.int64), assigns)
+
+        pick(block.costs, block.idx, self._valid)
+        pick(block.inv_costs, block.inv_idx, self._invalid)
+
+    def finalize(
+        self,
+        evaluator: Evaluator,
+        *,
+        exact_fallback: bool = True,
+        elapsed_s: float = 0.0,
+    ) -> TopKResult:
+        """Global ranking; open slots are filled by the best invalid configs
+        re-costed through ``evaluator.exact_cost`` (never silent ``inf``)."""
+        entries = [
+            TopKEntry(int(i), float(c), a, valid=True)
+            for c, i, a in zip(self._valid.costs, self._valid.gidx,
+                               self._valid.assigns)
+        ]
+        free = self.k - len(entries)
+        if free > 0 and exact_fallback and len(self._invalid.assigns):
+            survivors = []
+            for c, i, a in zip(self._invalid.costs, self._invalid.gidx,
+                               self._invalid.assigns):
+                exact = evaluator.exact_cost(a)
+                if exact is None:
+                    break               # evaluator has no exact path
+                survivors.append(TopKEntry(int(i), exact, a,
+                                           valid=False, exact=True))
+            survivors.sort(key=lambda e: (e.cost, e.index))
+            entries.extend(survivors[:free])
+        return TopKResult(
+            entries=entries,
+            k=self.k,
+            n_evaluated=self.n_evaluated,
+            n_valid=self.n_valid,
+            elapsed_s=elapsed_s,
+        )

@@ -1,6 +1,8 @@
 """Merge-round mathematics (paper §2.3, Eqs. 20-25) — unit + property tests."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -9,6 +9,8 @@ float64 round-off.  This is the same oracle pattern the Pallas kernels use.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
