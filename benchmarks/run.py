@@ -9,6 +9,7 @@ One module per paper aspect (DESIGN.md §9 experiment index):
   E8  bench_roofline         40-cell dry-run roofline table
   E9  bench_tpu_model        TPU analytical model vs compiled dry-run
   E11 bench_kernels          Pallas kernels vs jnp oracles
+  E12 bench_service          async what-if service vs per-query baseline
 
 Markdown reports land in artifacts/bench/.
 """
@@ -27,6 +28,7 @@ MODULES = [
     ("E8 roofline", "benchmarks.bench_roofline"),
     ("E9 tpu_model", "benchmarks.bench_tpu_model"),
     ("E11 kernels", "benchmarks.bench_kernels"),
+    ("E12 service", "benchmarks.bench_service"),
     ("serving", "benchmarks.bench_serving"),
 ]
 

@@ -5,9 +5,12 @@
 3. TUNE     (io.sort.mb, io.sort.factor, numReducers, combiner) with the
             vmapped what-if engine + coordinate descent — pure model
             evaluations, no job runs (the paper's whole point).
-4. VERIFY   by actually running the recommended configuration: it must
+4. ANSWER   a batch of concurrent what-if questions (probes, sweeps, a
+            grid) through the async WhatIfService: all queries coalesce
+            into a handful of shared evaluator chunks.
+5. VERIFY   by actually running the recommended configuration: it must
             beat the default configuration's measured wall time.
-5. SIMULATE the tuned job on a virtual cluster with stragglers + failures
+6. SIMULATE the tuned job on a virtual cluster with stragglers + failures
             + speculative execution (paper §5 way (i)).
 
 Run:  PYTHONPATH=src python examples/job_tuning.py
@@ -19,7 +22,12 @@ from repro.core.hadoop.params import HadoopParams, MiB
 from repro.core.hadoop.simulator import SimConfig, simulate_job
 from repro.mapreduce import JOBS, make_input
 from repro.mapreduce.profiler import fit_cost_factors, predict, run_measured
-from repro.search import ChunkedEvaluator, coordinate_descent_ev, grid_search_ev
+from repro.search import (
+    ChunkedEvaluator,
+    WhatIfService,
+    coordinate_descent_ev,
+    grid_search_ev,
+)
 
 job = JOBS["wordcount"]
 N = 120_000
@@ -64,7 +72,34 @@ print(f"  exhaustive optimum: cost={exhaustive.best_cost:.3f}s "
       f"{exhaustive.topk.configs_per_sec:,.0f} configs/s) -> descent within "
       f"{100 * tuned.best_cost / max(exhaustive.best_cost, 1e-9) - 100:.1f}%")
 
-# ---- 4: verify on the engine ----
+# ---- 4: concurrent what-if questions through the async service ----
+# the multi-query path: heterogeneous questions share the evaluator's
+# compiled chunks instead of paying one padded evaluate call each
+best = tuned.best_assignment
+with WhatIfService(evaluator) as svc:
+    futures = {
+        "tuned, combiner off": svc.probe({**best, "pUseCombine": 0.0}),
+        "tuned, 2x reducers": svc.probe(
+            {**best, "pNumReducers": 2 * best["pNumReducers"]}),
+        "reducer sweep @tuned": svc.sweep(
+            "pNumReducers", [1.0, 2.0, 4.0, 8.0, 16.0],
+            base={k: v for k, v in best.items() if k != "pNumReducers"}),
+        "sortMB x factor grid": svc.grid(
+            {"pSortMB": space["pSortMB"], "pSortFactor": space["pSortFactor"]}),
+    }
+    answers = {label: f.result() for label, f in futures.items()}
+summary = svc.summary()
+print("\n== concurrent what-if queries (async service) ==")
+for label, r in answers.items():
+    _, cost, a = r.best()
+    print(f"  {label:22s} best={cost:7.3f}s rows={r.stats.n_rows:2d} "
+          f"latency={r.stats.latency_s*1e3:5.1f}ms")
+print(f"  {summary['queries']} queries -> {summary['chunks']} evaluator "
+      f"chunks ({summary['shared_chunks']} shared); "
+      f"p50={summary['latency_p50_s']*1e3:.1f}ms "
+      f"p99={summary['latency_p99_s']*1e3:.1f}ms")
+
+# ---- 5: verify on the engine ----
 before = run_measured(job, default_hp, N, seed=2)
 after = run_measured(job, hp_tuned, N, seed=2)
 print("\n== verification (real engine runs) ==")
@@ -75,7 +110,7 @@ print(f"  tuned config   : measured {after.wall_s:.3f}s "
 speedup = before.wall_s / max(after.wall_s, 1e-9)
 print(f"  speedup {speedup:.2f}x  {'OK' if speedup > 1.0 else 'NO GAIN'}")
 
-# ---- 5: virtual-cluster simulation (paper §5 way (i)) ----
+# ---- 6: virtual-cluster simulation (paper §5 way (i)) ----
 print("\n== task-scheduler simulation: stragglers + failure + speculation ==")
 sim_hp = hp_tuned.replace(pNumNodes=8, pNumMappers=64, pNumReducers=16)
 for label, sc in [

@@ -31,9 +31,10 @@ wall = time.perf_counter() - t0
 print("== request serving ==")
 for r in done:
     print(f"  req {r.rid}: prompt {len(r.prompt):2d} toks -> "
-          f"{len(r.generated)} new, first-token latency {r.latency_s*1e3:.0f}ms")
+          f"{len(r.generated)} new, e2e latency {r.latency_s*1e3:.0f}ms")
 print(f"  {server.stats['tokens_out']} tokens in {wall:.2f}s; "
-      f"stats={server.stats}")
+      f"stats={server.stats} p50={server.latency.p50*1e3:.0f}ms "
+      f"p99={server.latency.p99*1e3:.0f}ms")
 
 # ---- throughput batch ----
 prompts = rng.integers(2, cfg.vocab_size, (8, 16))

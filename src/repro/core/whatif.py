@@ -9,6 +9,10 @@ for ``valid == 0`` configs.  This module keeps the seed API:
   all-invalid grid instead of silently returning index 0.
 * :func:`evaluate_grid` — parameters swept as (B,) arrays.
 * :func:`evaluate_product_grid` — streamed Cartesian sweep.
+* :func:`evaluate_queries` — MANY heterogeneous queries at once, resolved
+  concurrently through :class:`repro.search.service.WhatIfService` (the
+  multi-query path: probes/sweeps/grids are coalesced into shared evaluator
+  chunks instead of paying one padded ``evaluate`` call each).
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ from repro.search.evaluator import (
     evaluate_unchunked,
 )
 from repro.search.grid import iter_blocks
+from repro.search.service import QueryResult, WhatIfService
 
 from .hadoop.params import CostFactors, HadoopParams, ProfileStats
 
@@ -33,6 +38,8 @@ __all__ = [
     "InvalidGridError",
     "evaluate_grid",
     "evaluate_product_grid",
+    "evaluate_queries",
+    "WhatIfService",
 ]
 
 # The seed name; one dataclass serves both the legacy and search APIs.
@@ -90,3 +97,29 @@ def evaluate_product_grid(
                  for k in parts[0].outputs},
         total_cost=np.concatenate([r.total_cost for r in parts]),
     )
+
+
+def evaluate_queries(
+    p: HadoopParams,
+    s: ProfileStats,
+    c: CostFactors,
+    queries: Sequence[Mapping[str, Any]],
+    *,
+    chunk: int | None = None,
+    exact_fallback: bool = False,
+    evaluator: ChunkedEvaluator | None = None,
+) -> list[QueryResult]:
+    """Answer many what-if queries in one coalesced pass.
+
+    Each query is an override mapping in the :func:`evaluate_grid` format
+    (scalars broadcast, 1-D arrays sweep).  All queries share one admission
+    queue and one compiled evaluator executable; results are bit-for-bit
+    what per-query :func:`evaluate_grid` calls would return, but heterogen-
+    eous small queries no longer pay a padded chunk evaluation each.  With
+    ``exact_fallback`` rows whose closed-form model is out of domain are
+    re-costed through the task-scheduler simulator instead of ``inf``.
+    """
+    if evaluator is None:
+        evaluator = cached_evaluator(p, s, c, chunk)
+    with WhatIfService(evaluator) as svc:
+        return svc.map(queries, exact_fallback=exact_fallback)

@@ -1,4 +1,34 @@
-from .stragglers import StragglerDetector, should_speculate
-from .train_loop import Trainer, TrainerConfig
+"""repro.runtime — serving/training loops + the shared batching machinery.
 
-__all__ = ["Trainer", "TrainerConfig", "StragglerDetector", "should_speculate"]
+``batching`` (admission queues, latency stats) is imported eagerly: it is
+dependency-free and is also used by :mod:`repro.search.service`.  The
+trainer/straggler symbols are resolved lazily (PEP 562) so that importing
+the batching layer does not drag the whole model stack along.
+"""
+
+from .batching import AdmissionQueue, LatencyStats
+
+__all__ = [
+    "AdmissionQueue",
+    "LatencyStats",
+    "Trainer",
+    "TrainerConfig",
+    "StragglerDetector",
+    "should_speculate",
+]
+
+_LAZY = {
+    "Trainer": "train_loop",
+    "TrainerConfig": "train_loop",
+    "StragglerDetector": "stragglers",
+    "should_speculate": "stragglers",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

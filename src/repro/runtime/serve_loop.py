@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.runtime.batching import AdmissionQueue, LatencyStats
 
 __all__ = ["Request", "Server"]
 
@@ -38,7 +39,7 @@ class Request:
     max_new_tokens: int = 16
     generated: list = field(default_factory=list)
     done: bool = False
-    latency_s: float = 0.0
+    latency_s: float = 0.0      # END-TO-END: admission -> last token emitted
 
 
 class Server:
@@ -54,48 +55,79 @@ class Server:
             lambda p, tok, caches, pos: lm.decode_step(p, cfg, tok, caches, pos)
         )
         self.stats = {"prefills": 0, "decode_ticks": 0, "tokens_out": 0}
+        self.latency = LatencyStats()
 
     def _sample(self, logits: jax.Array, key) -> int:
         if self.temperature <= 0:
             return int(jnp.argmax(logits[0, -1]))
         return int(jax.random.categorical(key, logits[0, -1] / self.temperature))
 
-    def generate(self, requests: list[Request]) -> list[Request]:
+    def generate(self, requests: list[Request],
+                 max_slots: int | None = None) -> list[Request]:
         """Serve a list of requests with per-request caches (B=1 slots),
-        batching decode ticks across active requests round-robin."""
-        key = jax.random.PRNGKey(0)
-        active: list[tuple[Request, dict, int]] = []
-        for req in requests:
-            t0 = time.perf_counter()
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, caches, pos = self._prefill(self.params, toks)
-            self.stats["prefills"] += 1
-            key, sub = jax.random.split(key)
-            nxt = self._sample(logits, sub)
-            req.generated.append(nxt)
-            req.latency_s = time.perf_counter() - t0
-            active.append((req, caches, int(pos)))
+        batching decode ticks across active requests round-robin.
 
-        # lockstep decode ticks
-        done = 0
-        while done < len(active):
-            done = 0
+        Requests flow through the shared admission queue: at most
+        ``max_slots`` are in flight at once (all of them when ``None``);
+        a finished slot immediately admits the next queued request —
+        the same continuous-batching shape as the what-if service.
+
+        ``req.latency_s`` is END-TO-END (admission to last token), and
+        ``stats["decode_ticks"]`` counts lockstep ticks — one per decode
+        round, not one per active request per round.  (Both were wrong
+        before: latency froze at prefill time and never saw decode, and
+        the tick counter was really a decode-call counter.)
+        """
+        key = jax.random.PRNGKey(0)
+        queue: AdmissionQueue[Request] = AdmissionQueue()
+        t_admit: dict[int, float] = {}
+        for req in requests:
+            t_admit[id(req)] = time.perf_counter()
+            queue.put(req)
+        slots = len(requests) if max_slots is None else max(1, max_slots)
+
+        active: list[tuple[Request, dict, int]] = []
+        while active or len(queue):
+            # admission: fill free slots from the queue (prefill each)
+            while len(active) < slots:
+                req = queue.pop()
+                if req is None:
+                    break
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, caches, pos = self._prefill(self.params, toks)
+                self.stats["prefills"] += 1
+                key, sub = jax.random.split(key)
+                req.generated.append(self._sample(logits, sub))
+                active.append((req, caches, int(pos)))
+
+            # one lockstep decode tick over every unfinished slot
+            ticked = False
             for i, (req, caches, pos) in enumerate(active):
-                if req.done or len(req.generated) >= req.max_new_tokens:
-                    req.done = True
-                    done += 1
+                if len(req.generated) >= req.max_new_tokens:
                     continue
+                if not ticked:
+                    self.stats["decode_ticks"] += 1
+                    ticked = True
                 tok = jnp.asarray([[req.generated[-1]]], jnp.int32)
                 logits, caches = self._decode(
                     self.params, tok, caches, jnp.asarray(pos, jnp.int32)
                 )
-                self.stats["decode_ticks"] += 1
                 key, sub = jax.random.split(key)
-                nxt = self._sample(logits, sub)
-                req.generated.append(nxt)
+                req.generated.append(self._sample(logits, sub))
                 self.stats["tokens_out"] += 1
                 active[i] = (req, caches, pos + 1)
-        return [a[0] for a in active]
+
+            # retire finished slots (freeing them for queued requests)
+            still: list[tuple[Request, dict, int]] = []
+            for req, caches, pos in active:
+                if len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    req.latency_s = time.perf_counter() - t_admit[id(req)]
+                    self.latency.record(req.latency_s)
+                else:
+                    still.append((req, caches, pos))
+            active = still
+        return requests
 
     def throughput_batch(self, prompts: np.ndarray, new_tokens: int) -> dict:
         """Fixed-batch generation (all slots in lockstep) — the serving

@@ -11,6 +11,9 @@ configurations.  This package is the platform for that at production scale:
 * :mod:`~repro.search.topk`       — streaming on-device top-k merging.
 * :mod:`~repro.search.strategies` — grid / random / coordinate-descent
   search over any evaluator.
+* :mod:`~repro.search.service`    — async what-if query service: concurrent
+  probes/sweeps/grids coalesced into shared evaluator chunks (continuous
+  batching over row slots, per-query futures + latency stats).
 * :mod:`~repro.search.tpu`        — the TPU step model behind the same
   evaluator interface.
 
@@ -30,6 +33,7 @@ from .evaluator import (
     evaluate_unchunked,
 )
 from .grid import assignment_at, iter_blocks, sample_space, space_block, space_size
+from .service import QueryResult, QueryStats, WhatIfService
 from .strategies import (
     TuningResult,
     coordinate_descent,
@@ -68,6 +72,9 @@ __all__ = [
     "random_search_ev",
     "coordinate_descent",
     "coordinate_descent_ev",
+    "WhatIfService",
+    "QueryResult",
+    "QueryStats",
     "TpuEvaluator",
     "mesh_space",
     "tune_tpu",

@@ -25,7 +25,12 @@ import numpy as np
 
 from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
 
-from .evaluator import Evaluator, apply_assignment, cached_evaluator
+from .evaluator import (
+    Evaluator,
+    InvalidGridError,
+    apply_assignment,
+    cached_evaluator,
+)
 from .grid import iter_blocks, sample_space
 from .topk import TopKAccumulator, TopKResult
 
@@ -48,6 +53,7 @@ class TuningResult:
     evaluations: int
     history: list[tuple[dict[str, float], float]] = field(default_factory=list)
     topk: TopKResult | None = None
+    exact: bool = False     # best_cost came via the exact-simulator escape hatch
 
     def apply(self, p: HadoopParams) -> HadoopParams:
         """Materialize the winning assignment onto a HadoopParams object."""
@@ -126,15 +132,25 @@ def coordinate_descent_ev(
     space: Mapping[str, Sequence[float]],
     *,
     max_rounds: int = 8,
+    exact_fallback: bool = True,
 ) -> TuningResult:
     """Iterate per-parameter sweeps to a fixpoint (a handful of evaluator
     calls; reaches the grid optimum when the cost model is coordinate-wise
-    quasi-convex, which holds on the benchmark spaces)."""
+    quasi-convex, which holds on the benchmark spaces).
+
+    A sweep whose rows are *all* invalid (closed-form model out of domain)
+    is re-costed through ``evaluator.exact_cost`` when ``exact_fallback`` is
+    set, matching :func:`search_topk`.  If no finite cost is ever found the
+    function raises :class:`InvalidGridError` — it used to silently return
+    a ``TuningResult`` with ``best_cost == inf`` and an arbitrary
+    assignment.
+    """
     keys = list(space.keys())
     assign = {k: float(space[k][len(space[k]) // 2]) for k in keys}
     evals = 0
     history: list[tuple[dict[str, float], float]] = []
     best_cost = np.inf
+    best_exact = False
 
     for _ in range(max_rounds):
         changed = False
@@ -149,9 +165,21 @@ def coordinate_descent_ev(
             # rows are far cheaper than a compile (measured in bench_tuner)
             res = evaluator.evaluate(overrides)
             evals += len(cand)
-            i = int(np.argmin(res.total_cost))
-            if res.total_cost[i] < best_cost - 1e-12:
-                best_cost = float(res.total_cost[i])
+            costs = np.asarray(res.total_cost, dtype=np.float64)
+            swept_exact = False
+            if exact_fallback and not np.isfinite(costs).any():
+                # whole sweep out of the closed-form domain: cost every
+                # candidate via the exact simulator instead of argmin(inf)
+                exact_costs = [
+                    evaluator.exact_cost({**assign, k: float(v)}) for v in cand
+                ]
+                if None not in exact_costs:
+                    costs = np.asarray(exact_costs, dtype=np.float64)
+                    swept_exact = True
+            i = int(np.argmin(costs))
+            if costs[i] < best_cost - 1e-12:
+                best_cost = float(costs[i])
+                best_exact = swept_exact
                 if assign[k] != float(cand[i]):
                     assign[k] = float(cand[i])
                     changed = True
@@ -159,7 +187,13 @@ def coordinate_descent_ev(
         if not changed:
             break
 
-    return TuningResult(dict(assign), float(best_cost), evals, history)
+    if not np.isfinite(best_cost):
+        raise InvalidGridError(
+            "coordinate descent found no valid configuration (all sweeps "
+            "invalid and no exact_cost escape hatch on this evaluator)"
+        )
+    return TuningResult(dict(assign), float(best_cost), evals, history,
+                        exact=best_exact)
 
 
 # --------------------------------------------------------------------------
@@ -181,9 +215,10 @@ def grid_search(
     *,
     evaluator: Evaluator | None = None,
     chunk: int | None = None,
+    exact_fallback: bool = True,
 ) -> TuningResult:
     ev = _hadoop_evaluator(p, s, c, evaluator, chunk)
-    return grid_search_ev(ev, space)
+    return grid_search_ev(ev, space, exact_fallback=exact_fallback)
 
 
 def random_search(
@@ -196,9 +231,11 @@ def random_search(
     seed: int = 0,
     evaluator: Evaluator | None = None,
     chunk: int | None = None,
+    exact_fallback: bool = True,
 ) -> TuningResult:
     ev = _hadoop_evaluator(p, s, c, evaluator, chunk)
-    return random_search_ev(ev, space, samples=samples, seed=seed)
+    return random_search_ev(ev, space, samples=samples, seed=seed,
+                            exact_fallback=exact_fallback)
 
 
 def coordinate_descent(
@@ -210,6 +247,8 @@ def coordinate_descent(
     max_rounds: int = 8,
     evaluator: Evaluator | None = None,
     chunk: int | None = None,
+    exact_fallback: bool = True,
 ) -> TuningResult:
     ev = _hadoop_evaluator(p, s, c, evaluator, chunk)
-    return coordinate_descent_ev(ev, space, max_rounds=max_rounds)
+    return coordinate_descent_ev(ev, space, max_rounds=max_rounds,
+                                 exact_fallback=exact_fallback)

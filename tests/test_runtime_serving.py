@@ -1,11 +1,14 @@
 """Serving runtime + data pipeline coverage."""
 
+import time
+
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.data import PipelineConfig, TokenPipeline
 from repro.launch.steps import init_params
+from repro.runtime.batching import AdmissionQueue, LatencyStats
 from repro.runtime.serve_loop import Request, Server
 
 
@@ -25,6 +28,75 @@ def test_server_generate_and_throughput():
     )
     assert out["output"].shape == (2, 4)
     assert out["tok_per_s"] > 0
+
+
+def test_generate_stats_tick_counts_and_e2e_latency():
+    """Regression for two Server.generate accounting bugs:
+    * latency_s froze at prefill time and never included decode;
+    * decode_ticks incremented once per ACTIVE REQUEST per tick instead of
+      once per lockstep tick."""
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    server = Server(cfg, params, max_len=64)
+
+    reqs = [Request(rid=i, prompt=[2, 3, 4 + i], max_new_tokens=5)
+            for i in range(3)]
+    t0 = time.perf_counter()
+    server.generate(reqs)
+    wall = time.perf_counter() - t0
+
+    # lockstep: all 3 requests decode 4 tokens in the SAME 4 ticks
+    assert server.stats["decode_ticks"] == 4          # was 12 before the fix
+    assert server.stats["tokens_out"] == 12
+    # end-to-end latency: admitted together, finished on the last tick =>
+    # every request's latency spans (almost) the whole call, and none of
+    # them is frozen at its tiny prefill-only value
+    for r in reqs:
+        assert 0.5 * wall < r.latency_s <= wall
+    assert server.latency.count == 3
+    assert server.latency.p99 >= server.latency.p50 > 0
+
+
+def test_generate_slot_limited_admission():
+    """max_slots=1 serializes requests through the admission queue; output
+    tokens are unchanged vs. unconstrained slots (greedy decode)."""
+    cfg = get_config("stablelm-1.6b").smoke()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[2, 3, 4], [5, 6, 7, 8]]
+
+    outs = []
+    for slots in (None, 1):
+        server = Server(cfg, params, max_len=64)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        server.generate(reqs, max_slots=slots)
+        assert all(r.done and len(r.generated) == 4 for r in reqs)
+        outs.append([r.generated for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_admission_queue_and_latency_stats():
+    q = AdmissionQueue()
+    assert q.put("a") == 1 and q.put_many(["b", "c"]) == 2
+    assert q.peak_depth == 3 and len(q) == 3
+    assert q.peek() == "a" and q.pop() == "a"
+    assert q.take(5) == ["b", "c"] and len(q) == 0
+    assert q.wait(timeout=0.01) is False
+    q.close()
+    assert q.wait() is False                 # closed + empty: don't block
+    try:
+        q.put("d")
+        assert False, "put into closed queue must raise"
+    except RuntimeError:
+        pass
+
+    ls = LatencyStats()
+    assert ls.p50 == 0.0 and ls.count == 0
+    for v in (0.1, 0.2, 0.3, 0.4):
+        ls.record(v)
+    assert ls.count == 4
+    assert ls.p50 == np.percentile([0.1, 0.2, 0.3, 0.4], 50)
+    assert ls.p99 <= 0.4 and ls.mean() == np.mean([0.1, 0.2, 0.3, 0.4])
 
 
 def test_server_greedy_decode_deterministic():

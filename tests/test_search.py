@@ -25,8 +25,11 @@ from repro.search import (
     ChunkedEvaluator,
     InvalidGridError,
     TpuEvaluator,
+    coordinate_descent_ev,
     evaluate_unchunked,
+    grid_search,
     grid_search_ev,
+    random_search,
     search_topk,
     space_block,
     space_size,
@@ -185,6 +188,55 @@ def test_escape_hatch_routes_invalid_survivors_to_simulator():
     # without the hatch the old behavior (nothing rankable) raises
     with pytest.raises(InvalidGridError):
         search_topk(ev, INVALID_SPACE, k=2, exact_fallback=False).best()
+
+
+def test_coordinate_descent_all_invalid_routes_through_simulator():
+    """Regression: on an all-invalid space, argmin of an all-inf sweep used
+    to silently return ``best_cost == inf`` with an arbitrary assignment."""
+    ev = ChunkedEvaluator(P, S, C, chunk=8)
+    res = coordinate_descent_ev(ev, INVALID_SPACE)
+    assert np.isfinite(res.best_cost) and res.exact
+    # best_cost is the exact-simulator cost of the returned assignment
+    assert res.best_cost == pytest.approx(ev.exact_cost(res.best_assignment))
+    # ...and it is the optimum the simulator sees over the (tiny) grid
+    exact_grid = [
+        ev.exact_cost({k: float(v[0]) for k, v in
+                       space_block(INVALID_SPACE, i, i + 1).items()})
+        for i in range(space_size(INVALID_SPACE))
+    ]
+    assert res.best_cost == pytest.approx(min(exact_grid))
+
+
+def test_coordinate_descent_all_invalid_raises_without_hatch():
+    ev = ChunkedEvaluator(P, S, C, chunk=8)
+    with pytest.raises(InvalidGridError):
+        coordinate_descent_ev(ev, INVALID_SPACE, exact_fallback=False)
+
+
+def test_coordinate_descent_valid_space_unchanged():
+    """The hatch must not perturb descent on a space with valid configs."""
+    ev = ChunkedEvaluator(P, S, C, chunk=64)
+    a = coordinate_descent_ev(ev, SPACE)
+    b = coordinate_descent_ev(ev, SPACE, exact_fallback=False)
+    assert a.best_assignment == b.best_assignment
+    assert a.best_cost == b.best_cost and not a.exact
+
+
+def test_seed_wrappers_forward_exact_fallback():
+    """Regression: grid_search/random_search/coordinate_descent dropped the
+    exact_fallback flag instead of forwarding it to the _ev strategies."""
+    # hatch on (default): all-invalid space still yields a usable result
+    res = grid_search(P, S, C, INVALID_SPACE, chunk=8)
+    assert np.isfinite(res.best_cost)
+    assert res.topk.best().exact
+    # hatch explicitly off: nothing rankable -> raise, not a silent inf
+    with pytest.raises(InvalidGridError):
+        grid_search(P, S, C, INVALID_SPACE, chunk=8, exact_fallback=False)
+    with pytest.raises(InvalidGridError):
+        random_search(P, S, C, INVALID_SPACE, samples=16, chunk=8,
+                      exact_fallback=False)
+    res = random_search(P, S, C, INVALID_SPACE, samples=16, chunk=8)
+    assert np.isfinite(res.best_cost)
 
 
 def test_mixed_grid_prefers_valid_configs():

@@ -1,0 +1,278 @@
+"""repro.search.service: the async what-if query service.
+
+The contract under test:
+* N concurrent mixed-shape queries (probes / sweeps / grids) resolve
+  bit-for-bit identically to sequential ``ChunkedEvaluator.evaluate`` calls
+  on the same rows;
+* ``valid == 0`` rows resolve through the exact task-scheduler simulator
+  when the query opts in (and ``best()`` raises otherwise);
+* queue pressure coalesces: many small queries ride far fewer evaluator
+  chunks than there are queries, and the accounting (latency, queue depth,
+  chunk sharing) reflects it.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.hadoop import CostFactors, HadoopParams, MiB, ProfileStats
+from repro.core.whatif import evaluate_queries
+from repro.search import (
+    ChunkedEvaluator,
+    InvalidGridError,
+    WhatIfService,
+    space_block,
+    space_size,
+)
+
+P = HadoopParams(pNumNodes=8, pNumMappers=64, pNumReducers=16, pSplitSize=128 * MiB)
+S = ProfileStats(sMapSizeSel=0.8, sReduceSizeSel=0.5)
+C = CostFactors()
+
+# numSpills >> pSortFactor**2 -> closed-form merge math out of domain
+INVALID = {"pSortMB": 0.25, "pSortFactor": 2.0}
+
+
+@pytest.fixture(scope="module")
+def evaluator():
+    return ChunkedEvaluator(P, S, C, chunk=64)
+
+
+def _mixed_queries(rng, n):
+    """A mixed workload: ~1/3 probes, ~1/3 sweeps, ~1/3 small grids."""
+    sortmb = np.array([16.0, 25.0, 50.0, 100.0, 200.0, 400.0])
+    queries = []
+    for i in range(n):
+        kind = i % 3
+        if kind == 0:       # single-config probe
+            queries.append({"pSortMB": np.array([rng.choice(sortmb)])})
+        elif kind == 1:     # per-axis sweep, pinned base
+            queries.append({
+                "pNumReducers": np.array([4.0, 8.0, 16.0, 32.0]),
+                "pSortMB": np.full(4, rng.choice(sortmb)),
+            })
+        else:               # small product grid
+            space = {"pSortMB": sortmb[:3].tolist(),
+                     "pSortFactor": [5.0, 10.0, 25.0]}
+            queries.append(space_block(space, 0, space_size(space)))
+    return queries
+
+
+def _assert_bitwise(result, ref):
+    assert np.array_equal(result.total_cost, ref.total_cost)
+    for k in ref.outputs:
+        assert np.array_equal(result.outputs[k], ref.outputs[k]), k
+
+
+# ------------------------------------------------------------------
+# equivalence
+# ------------------------------------------------------------------
+
+
+def test_concurrent_mixed_queries_match_sequential_evaluate(evaluator):
+    queries = _mixed_queries(np.random.default_rng(0), 24)
+    with WhatIfService(evaluator) as svc:
+        results = svc.map(queries)
+    assert len(results) == len(queries)
+    for q, r in zip(queries, results):
+        _assert_bitwise(r, evaluator.evaluate(q))
+        assert r.stats.n_rows == len(next(iter(q.values())))
+        assert r.stats.latency_s > 0 and r.stats.n_chunks >= 1
+
+
+def test_threaded_submission_matches_sequential(evaluator):
+    """True concurrency: every query arrives from its own thread."""
+    queries = _mixed_queries(np.random.default_rng(1), 12)
+    results = [None] * len(queries)
+
+    def submit(i):
+        results[i] = svc.submit(queries[i]).result(timeout=120)
+
+    with WhatIfService(evaluator, window_s=0.01) as svc:
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(len(queries))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for q, r in zip(queries, results):
+        _assert_bitwise(r, evaluator.evaluate(q))
+
+
+def test_grid_query_streams_across_chunks(evaluator):
+    """A query bigger than one chunk spans several chunks, same results."""
+    space = {"pSortMB": [16.0, 25.0, 50.0, 100.0, 200.0],
+             "pSortFactor": [5.0, 10.0, 25.0, 50.0],
+             "pNumReducers": [4.0, 8.0, 16.0, 32.0, 64.0]}
+    assert space_size(space) > evaluator.chunk
+    with WhatIfService(evaluator) as svc:
+        r = svc.grid(space).result(timeout=300)
+    cols = space_block(space, 0, space_size(space))
+    _assert_bitwise(r, evaluator.evaluate(cols))
+    assert r.stats.n_chunks >= 2
+    i, cost, assignment = r.best()
+    assert np.isfinite(cost)
+    assert assignment == {k: float(v[i]) for k, v in cols.items()}
+
+
+def test_probe_and_sweep_helpers(evaluator):
+    with WhatIfService(evaluator) as svc:
+        pr = svc.probe({"pSortMB": 100.0}, exact_fallback=False).result(60)
+        sw = svc.sweep("pSortMB", [25.0, 50.0, 100.0],
+                       base={"pSortFactor": 25.0}).result(60)
+    assert pr.total_cost.shape == (1,)
+    _assert_bitwise(pr, evaluator.evaluate({"pSortMB": np.array([100.0])}))
+    ref = evaluator.evaluate({"pSortMB": np.array([25.0, 50.0, 100.0]),
+                              "pSortFactor": np.full(3, 25.0)})
+    _assert_bitwise(sw, ref)
+
+
+def test_evaluate_queries_multi_query_path():
+    """core.whatif.evaluate_queries routes through the service."""
+    queries = [{"pSortMB": np.array([50.0, 100.0])},
+               {"pNumReducers": np.array([8.0, 16.0, 32.0])}]
+    ev = ChunkedEvaluator(P, S, C, chunk=64)
+    results = evaluate_queries(P, S, C, queries, evaluator=ev)
+    for q, r in zip(queries, results):
+        _assert_bitwise(r, ev.evaluate(q))
+
+
+# ------------------------------------------------------------------
+# escape hatch / error semantics
+# ------------------------------------------------------------------
+
+
+def test_escape_hatch_rows_resolve_via_simulator(evaluator):
+    with WhatIfService(evaluator) as svc:
+        r = svc.probe(INVALID).result(timeout=120)          # hatch on by default
+        r_raw = svc.probe(INVALID, exact_fallback=False).result(timeout=120)
+    assert r.exact.all() and np.isfinite(r.total_cost).all()
+    assert r.total_cost[0] == pytest.approx(evaluator.exact_cost(INVALID))
+    assert r.stats.n_exact == 1
+    # without the hatch: inf cost, and best() raises instead of lying
+    assert not np.isfinite(r_raw.total_cost).any()
+    with pytest.raises(InvalidGridError):
+        r_raw.best()
+
+
+def test_mixed_valid_invalid_rows(evaluator):
+    ov = {"pSortMB": np.array([0.25, 100.0]), "pSortFactor": np.array([2.0, 25.0])}
+    with WhatIfService(evaluator) as svc:
+        r = svc.submit(ov, exact_fallback=True).result(timeout=120)
+    assert list(r.exact) == [True, False]
+    assert np.isfinite(r.total_cost).all()
+    assert r.total_cost[0] == pytest.approx(
+        evaluator.exact_cost({"pSortMB": 0.25, "pSortFactor": 2.0})
+    )
+    # the valid row is untouched model cost
+    ref = evaluator.evaluate(ov)
+    assert r.total_cost[1] == ref.total_cost[1]
+
+
+def test_submit_validation(evaluator):
+    with WhatIfService(evaluator) as svc:
+        with pytest.raises(KeyError):
+            svc.submit({"nope": 1.0})
+        with pytest.raises(ValueError):
+            svc.submit({})
+        with pytest.raises(ValueError):
+            svc.submit({"pSortMB": np.array([])})
+        with pytest.raises(ValueError):
+            svc.submit({"pSortMB": np.array([1.0, 2.0]),
+                        "pSortFactor": np.array([1.0])})
+        # the service survives rejected submissions
+        r = svc.probe({"pSortMB": 100.0}, exact_fallback=False).result(60)
+        assert np.isfinite(r.total_cost).all()
+
+
+def test_evaluator_failure_resolves_future_and_drops_remaining_rows():
+    """A chunk that raises must fail that query's future, drop its not-yet-
+    evaluated rows (no wasted chunks), and leave the service serving."""
+    class FlakyEvaluator(ChunkedEvaluator):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.fail_next = 0
+            self.calls = 0
+
+        def evaluate(self, overrides):
+            self.calls += 1
+            if self.fail_next > 0:
+                self.fail_next -= 1
+                raise RuntimeError("injected evaluator failure")
+            return super().evaluate(overrides)
+
+    ev = FlakyEvaluator(P, S, C, chunk=8)
+    with WhatIfService(ev) as svc:
+        ev.fail_next = 1
+        big = svc.submit({"pSortMB": np.linspace(16.0, 400.0, 20)})  # 3 chunks
+        with pytest.raises(RuntimeError, match="injected"):
+            big.result(timeout=120)
+        calls_after_failure = ev.calls
+        # the dead query's remaining 12 rows were dropped, not evaluated
+        r = svc.probe({"pSortMB": 100.0}, exact_fallback=False).result(120)
+        assert np.isfinite(r.total_cost).all()
+        assert ev.calls == calls_after_failure + 1
+
+
+def test_closed_service_rejects_submissions(evaluator):
+    svc = WhatIfService(evaluator)
+    svc.close()
+    with pytest.raises(RuntimeError):
+        svc.submit({"pSortMB": 100.0})
+
+
+# ------------------------------------------------------------------
+# coalescing / accounting
+# ------------------------------------------------------------------
+
+
+def test_queue_pressure_coalesces_queries_into_fewer_chunks(evaluator):
+    """32 small queries against a 64-row chunk must share chunks: the
+    evaluator is called far fewer times than there are queries."""
+    rng = np.random.default_rng(2)
+    queries = [{"pSortMB": np.array([rng.choice([25.0, 50.0, 100.0])])}
+               for _ in range(32)]
+    with WhatIfService(evaluator) as svc:
+        results = svc.map(queries)
+        summary = svc.summary()
+    assert summary["queries"] == 32 and summary["rows"] == 32
+    assert summary["chunks"] < 32          # coalescing happened
+    assert summary["shared_chunks"] >= 1
+    assert any(r.stats.n_shared_chunks > 0 for r in results)
+    assert summary["latency_count"] == 32
+    assert summary["latency_p99_s"] >= summary["latency_p50_s"] > 0
+    for q, r in zip(queries, results):
+        _assert_bitwise(r, evaluator.evaluate(q))
+
+
+def test_fixed_key_universe_coalesces_across_key_sets(evaluator):
+    """With keys=..., queries with DIFFERENT own key-sets are expanded to
+    the shared universe (absent keys at base values) and ride one chunk —
+    one compiled executable for every tenant."""
+    universe = ["pSortMB", "pSortFactor"]
+    queries = [{"pSortMB": np.array([25.0, 50.0])},
+               {"pSortFactor": np.array([5.0, 10.0, 25.0])},
+               {"pSortMB": np.array([100.0]), "pSortFactor": np.array([50.0])}]
+    with WhatIfService(evaluator, keys=universe) as svc:
+        results = svc.map(queries)
+        summary = svc.summary()
+        with pytest.raises(KeyError):
+            svc.submit({"pNumReducers": 8.0})       # outside the universe
+    assert summary["chunks"] == 1                   # all three shared it
+    base = evaluator.base_cfg
+    for q, r in zip(queries, results):
+        n = len(next(iter(q.values())))
+        expanded = {k: np.asarray(q.get(k, np.full(n, float(np.asarray(base[k])))))
+                    for k in universe}
+        _assert_bitwise(r, evaluator.evaluate(expanded))
+        assert set(r.overrides) == set(universe)
+
+
+def test_queue_depth_recorded(evaluator):
+    queries = [{"pSortMB": np.array([50.0])} for _ in range(8)]
+    with WhatIfService(evaluator) as svc:
+        results = svc.map(queries)
+    depths = [r.stats.queue_depth for r in results]
+    assert depths == sorted(depths)        # FIFO admission order
+    assert max(depths) >= 1                # pressure was visible
