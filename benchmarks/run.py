@@ -10,6 +10,7 @@ One module per paper aspect (DESIGN.md §9 experiment index):
   E9  bench_tpu_model        TPU analytical model vs compiled dry-run
   E11 bench_kernels          Pallas kernels vs jnp oracles
   E12 bench_service          async what-if service vs per-query baseline
+  E13 bench_cluster          vectorized capacity planner vs per-scenario DES
 
 Markdown reports land in artifacts/bench/.
 """
@@ -29,6 +30,7 @@ MODULES = [
     ("E9 tpu_model", "benchmarks.bench_tpu_model"),
     ("E11 kernels", "benchmarks.bench_kernels"),
     ("E12 service", "benchmarks.bench_service"),
+    ("E13 cluster", "benchmarks.bench_cluster"),
     ("serving", "benchmarks.bench_serving"),
 ]
 

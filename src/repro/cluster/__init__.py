@@ -1,0 +1,70 @@
+"""repro.cluster — multi-job workload simulation + vectorized capacity planning.
+
+The paper (and ``repro.core.hadoop``) costs a *single* MapReduce job; this
+subsystem answers the cluster-level questions a multi-tenant deployment
+actually asks — how does a workload of concurrent jobs behave under slot
+contention, and what cluster shape minimizes tail latency?  Three layers:
+
+* :mod:`~repro.cluster.workload` — job classes over the canonical
+  :data:`repro.mapreduce.jobs.JOBS` profiles and arrival traces (Poisson,
+  bursty, replayed), generated at unit rate and rescaled so offered load is
+  a searchable knob.
+* :mod:`~repro.cluster.sched` — the multi-job discrete-event simulator:
+  FIFO / fair-share scheduling over shared slot pools, per-job queueing
+  delay / latency / makespan, per-node busy time, with the single-job
+  simulator's straggler / speculation / failure mechanics (and its exact
+  behaviour on a one-job trace).
+* :mod:`~repro.cluster.vector_sim` + :mod:`~repro.cluster.evaluator` — the
+  wave-level JAX rollout (``while_loop`` over scheduling rounds, ``vmap``
+  over scenarios, device-sharded via :mod:`repro.compat`) and
+  :class:`ClusterEvaluator`, which plugs cluster knobs into every
+  ``repro.search`` strategy and :class:`~repro.search.WhatIfService`.
+
+``benchmarks/bench_cluster.py`` asserts DES<->vectorized agreement on
+contention-free FIFO scenarios and measures scenario throughput;
+``examples/capacity_planning.py`` is the end-to-end walkthrough.
+"""
+
+from .evaluator import ClusterEvaluator
+from .sched import (
+    ClusterConfig,
+    ClusterTaskRecord,
+    JobStats,
+    WorkloadResult,
+    simulate_workload,
+)
+from .vector_sim import estimate_steps, pack_trace, simulate_batch
+from .workload import (
+    JobArrival,
+    JobClass,
+    WorkloadTrace,
+    bursty_trace,
+    default_job_classes,
+    poisson_trace,
+    replayed_trace,
+    rescale,
+    shuffle_full,
+    task_costs,
+)
+
+__all__ = [
+    "JobClass",
+    "JobArrival",
+    "WorkloadTrace",
+    "default_job_classes",
+    "poisson_trace",
+    "bursty_trace",
+    "replayed_trace",
+    "rescale",
+    "task_costs",
+    "shuffle_full",
+    "ClusterConfig",
+    "ClusterTaskRecord",
+    "JobStats",
+    "WorkloadResult",
+    "simulate_workload",
+    "pack_trace",
+    "estimate_steps",
+    "simulate_batch",
+    "ClusterEvaluator",
+]

@@ -1,0 +1,199 @@
+"""Capacity planning behind the :class:`repro.search.Evaluator` interface.
+
+``ClusterEvaluator`` makes *cluster* knobs — node count, slots per node,
+scheduler policy, reduce slowstart, offered arrival rate — searchable by
+every existing strategy (``grid_search_ev``, ``random_search_ev``,
+``coordinate_descent_ev``, streaming ``search_topk``) and servable by
+:class:`repro.search.WhatIfService`, exactly like the single-job Hadoop
+model:
+
+* ``evaluate`` expands each override row into (row x workload-seed)
+  scenarios, rolls them out with the vectorized wave simulator
+  (:mod:`repro.cluster.vector_sim`), and aggregates per-trace tail metrics;
+* the cost is ``mean`` or ``p95`` job latency (submit -> finish) averaged
+  over the workload seeds — the capacity-planning objective;
+* ``exact_cost`` routes an assignment through the multi-job DES
+  (:func:`repro.cluster.sched.simulate_workload`), the trusted reference —
+  rows the wave model could not converge (``valid == 0``) are re-costed
+  there by the standard escape hatch, never reported as a silent number.
+
+Override keys (the ``base_cfg`` universe):
+
+  ``pNumNodes``, ``pMaxMapsPerNode``, ``pMaxRedPerNode``,
+  ``pReduceSlowstart``, ``schedFair`` (0 = FIFO, 1 = fair),
+  ``arrivalRate`` (jobs/s offered to the cluster).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.search.evaluator import Evaluator, SearchResult, pad_block, split_overrides
+
+from .sched import ClusterConfig, simulate_workload
+from .vector_sim import estimate_steps, pack_trace, simulate_batch
+from .workload import JobClass, WorkloadTrace, default_job_classes, poisson_trace, rescale
+
+__all__ = ["ClusterEvaluator"]
+
+_OBJECTIVES = {"mean": "w_meanLat", "p95": "w_p95Lat"}
+
+
+class ClusterEvaluator(Evaluator):
+    """Batched workload-on-cluster evaluation over candidate cluster configs.
+
+    Parameters
+    ----------
+    classes : job mix (default :func:`default_job_classes`).
+    traces : explicit unit-rate workload traces; default ``n_seeds`` Poisson
+        traces of ``n_jobs`` jobs each.  The cost of a config is averaged
+        over the traces, so one lucky arrival pattern cannot pick the
+        cluster.
+    base : cluster defaults for keys a query leaves alone.
+    base_rate : default offered load (jobs/s; ``arrivalRate`` override).
+    objective : ``"p95"`` (default — tail latency is what capacity is
+        bought for) or ``"mean"``.
+    chunk : rows per vectorized call (rounded up to the device count).
+    """
+
+    def __init__(
+        self,
+        classes: Sequence[JobClass] | None = None,
+        *,
+        traces: Sequence[WorkloadTrace] | None = None,
+        n_jobs: int = 32,
+        n_seeds: int = 2,
+        trace_seed: int = 0,
+        base: ClusterConfig = ClusterConfig(),
+        base_rate: float = 0.1,
+        objective: str = "p95",
+        chunk: int = 256,
+        devices=None,
+    ):
+        if objective not in _OBJECTIVES:
+            raise ValueError(f"objective must be one of {sorted(_OBJECTIVES)}")
+        self.classes = list(classes) if classes is not None \
+            else default_job_classes()
+        self.traces = list(traces) if traces is not None else [
+            poisson_trace(self.classes, n_jobs, rate=1.0, seed=trace_seed + s)
+            for s in range(n_seeds)
+        ]
+        packed = [pack_trace(t) for t in self.traces]
+        #: (S, J) per-job constants shared by every scenario
+        self._cols = {k: np.stack([p[k] for p in packed]) for k in packed[0]}
+        self._objective = objective
+        self._base = base
+        self._devs = tuple(devices) if devices is not None \
+            else tuple(compat.default_search_devices())
+        self.num_devices = len(self._devs)
+        self.chunk = -(-max(chunk, 1) // self.num_devices) * self.num_devices
+        self.base_cfg = {
+            "pNumNodes": jnp.asarray(float(base.num_nodes)),
+            "pMaxMapsPerNode": jnp.asarray(float(base.map_slots_per_node)),
+            "pMaxRedPerNode": jnp.asarray(float(base.reduce_slots_per_node)),
+            "pReduceSlowstart": jnp.asarray(float(base.reduce_slowstart)),
+            "schedFair": jnp.asarray(1.0 if base.scheduler == "fair" else 0.0),
+            "arrivalRate": jnp.asarray(float(base_rate)),
+        }
+
+    # ---------------- Evaluator interface ----------------
+
+    @property
+    def cost_key(self) -> str:
+        return _OBJECTIVES[self._objective]
+
+    def evaluate(self, overrides: Mapping[str, Any]) -> SearchResult:
+        batched, static, n = split_overrides(self.base_cfg, overrides)
+        out_blocks: dict[str, list[np.ndarray]] = {}
+        for start in range(0, n, self.chunk):
+            stop = min(start + self.chunk, n)
+            rows, _ = pad_block(batched, start, stop, self.chunk)
+            out = self._evaluate_rows(rows, static)
+            for k, v in out.items():
+                out_blocks.setdefault(k, []).append(v[: stop - start])
+        outputs = {k: np.concatenate(v) for k, v in out_blocks.items()}
+        total = np.where(outputs["valid"] > 0, outputs[self.cost_key], np.inf)
+        return SearchResult(overrides=batched, outputs=outputs, total_cost=total)
+
+    def exact_cost(self, assignment: Mapping[str, float]) -> float:
+        """The multi-job DES on every trace; same objective, trusted path."""
+        cfg = {k: float(np.asarray(v)) for k, v in self.base_cfg.items()}
+        for k, v in assignment.items():
+            if k not in cfg:
+                raise KeyError(f"unknown config key: {k!r}")
+            cfg[k] = float(v)
+        nodes = int(round(cfg["pNumNodes"]))
+        mpn = int(round(cfg["pMaxMapsPerNode"]))
+        rpn = int(round(cfg["pMaxRedPerNode"]))
+        rate = cfg["arrivalRate"]
+        if nodes < 1 or mpn < 1 or rpn < 1 or rate <= 0:
+            return float("inf")
+        cc = ClusterConfig(
+            num_nodes=nodes, map_slots_per_node=mpn, reduce_slots_per_node=rpn,
+            scheduler="fair" if cfg["schedFair"] > 0.5 else "fifo",
+            reduce_slowstart=cfg["pReduceSlowstart"],
+        )
+        vals = []
+        for tr in self.traces:
+            res = simulate_workload(rescale(tr, rate), cc)
+            vals.append(res.p95_latency if self._objective == "p95"
+                        else res.mean_latency)
+        return float(np.mean(vals))
+
+    # ---------------- internals ----------------
+
+    def _evaluate_rows(self, rows: Mapping[str, np.ndarray],
+                       static: Mapping[str, float]) -> dict[str, np.ndarray]:
+        """One padded chunk -> per-row metrics (row x trace scenarios)."""
+        b = self.chunk
+        col = lambda k: rows[k] if k in rows else np.full(b, static[k])
+        nodes = np.round(col("pNumNodes"))
+        mpn = np.round(col("pMaxMapsPerNode"))
+        rpn = np.round(col("pMaxRedPerNode"))
+        rate = col("arrivalRate")
+        fair = (col("schedFair") > 0.5).astype(np.float64)
+        slow = col("pReduceSlowstart")
+        ok = (nodes >= 1) & (mpn >= 1) & (rpn >= 1) & (rate > 0)
+        # invalid rows are masked via ``ok``, but still ride the vmapped
+        # rollout — sanitize their knobs so a zero-slot lane cannot pin the
+        # whole chunk at the step cap (a lane that never finishes keeps the
+        # while_loop running for everyone)
+        nodes_s = np.maximum(nodes, 1.0)
+        mpn_s = np.maximum(mpn, 1.0)
+        rpn_s = np.maximum(rpn, 1.0)
+        rate_s = np.where(rate > 0, rate, 1.0)
+
+        cols, s = self._cols, len(self.traces)
+        rep = lambda a: np.repeat(a[:, None], s, axis=1).reshape(b * s)
+        perjob = lambda a: np.broadcast_to(
+            a[None], (b,) + a.shape).reshape(b * s, -1)
+        frac = (nodes_s - 1.0) / nodes_s
+        scen = {
+            "arrival": perjob(cols["arrival"]) / rep(rate_s)[:, None],
+            "n_maps": perjob(cols["n_maps"]),
+            "n_reds": perjob(cols["n_reds"]),
+            "map_cost": perjob(cols["map_cost"]),
+            "red_work": perjob(cols["red_work"]),
+            "shuffle": perjob(cols["shuffle"]) * rep(frac)[:, None],
+            "map_slots": rep(nodes_s * mpn_s),
+            "red_slots": rep(nodes_s * rpn_s),
+            "fair": rep(fair),
+            "slowstart": rep(slow),
+        }
+        out = simulate_batch(scen, n_steps=estimate_steps(scen),
+                             devices=self._devs)
+        shp = (b, s)
+        mean_lat = out["mean_latency"].reshape(shp).mean(axis=1)
+        p95_lat = out["p95_latency"].reshape(shp).mean(axis=1)
+        conv = out["converged"].reshape(shp).min(axis=1)
+        return {
+            "w_meanLat": mean_lat.astype(np.float64),
+            "w_p95Lat": p95_lat.astype(np.float64),
+            "w_makespan": out["makespan"].reshape(shp).mean(axis=1).astype(np.float64),
+            "w_util": out["utilization"].reshape(shp).mean(axis=1).astype(np.float64),
+            "valid": (ok & (conv > 0)).astype(np.float64),
+        }

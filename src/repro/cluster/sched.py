@@ -1,0 +1,486 @@
+"""Multi-job discrete-event cluster simulator (FIFO + fair-share).
+
+Extends the single-job Task Scheduler Simulator (paper §5(i),
+:mod:`repro.core.hadoop.simulator`) to a *shared* virtual cluster: a
+workload trace of jobs (:mod:`repro.cluster.workload`) contends for one
+pool of map slots and one pool of reduce slots across ``num_nodes`` nodes.
+Per-task costs still come from the paper's §2-§4 models, and the per-job
+mechanics are the single-job simulator's, job-tagged:
+
+* two-phase reduces — the shuffle overlaps the job's own map fleet; the
+  sort/reduce/write work only runs once ALL of that job's map outputs
+  exist;
+* slowstart — a job's reducers launch once ``reduce_slowstart`` of its
+  maps are done (a cluster-level knob here, so the planner can search it);
+* stragglers / speculative execution / node failures — identical seeded
+  mechanics (a node failure kills tasks of *every* job on the node and
+  re-executes lost map outputs of unfinished jobs).
+
+Scheduling policies:
+
+* ``fifo``  — free slots go to the earliest-submitted job with pending
+  tasks of that kind (Hadoop's default JobQueueTaskScheduler).
+* ``fair``  — free slots go to the job with the fewest running tasks of
+  that kind: equal per-job shares, a slot-granular max-min approximation
+  of the Hadoop Fair Scheduler without preemption.  ``JobClass.weight``
+  is arrival frequency in generated traces, *not* a scheduling share —
+  the vectorized model splits the same way, so ``evaluate`` and
+  ``exact_cost`` agree on what "fair" means.
+
+Determinism: one seeded RNG drives every duration draw; event ties break on
+a monotone sequence number, so runs are bit-identical given a seed.  With
+one job the simulation reproduces
+:func:`repro.core.hadoop.simulator.simulate_job` RNG-draw-for-RNG-draw
+(tested, including jitter/straggler/speculation noise).  The mechanics are
+deliberately *re-implemented* rather than imported: ``repro.core`` cannot
+depend on ``repro.cluster``, so ``simulate_job`` cannot be a wrapper over
+this engine without inverting the layering — the bit-for-bit equivalence
+test is the drift guard that pins the two copies together.
+"""
+
+from __future__ import annotations
+
+import heapq
+import random
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.hadoop.simulator import SimConfig, _duration
+from repro.core.hadoop.params import HadoopParams
+
+from .workload import WorkloadTrace, task_costs
+
+__all__ = [
+    "ClusterConfig",
+    "ClusterTaskRecord",
+    "JobStats",
+    "WorkloadResult",
+    "simulate_workload",
+]
+
+_INF = float("inf")
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """The capacity-planner's knobs: the shared cluster's shape + policy."""
+
+    num_nodes: int = 4
+    map_slots_per_node: int = 2
+    reduce_slots_per_node: int = 2
+    scheduler: str = "fifo"              # "fifo" | "fair"
+    reduce_slowstart: float = 0.05       # pReduceSlowstart, cluster-wide
+
+    def __post_init__(self):
+        if self.scheduler not in ("fifo", "fair"):
+            raise ValueError(f"unknown scheduler: {self.scheduler!r}")
+
+    @classmethod
+    def from_params(cls, p: HadoopParams, *, scheduler: str = "fifo"
+                    ) -> "ClusterConfig":
+        return cls(num_nodes=p.pNumNodes,
+                   map_slots_per_node=p.pMaxMapsPerNode,
+                   reduce_slots_per_node=p.pMaxRedPerNode,
+                   scheduler=scheduler,
+                   reduce_slowstart=p.pReduceSlowstart)
+
+
+@dataclass
+class ClusterTaskRecord:
+    job_id: int
+    kind: str               # "map" | "reduce"
+    index: int
+    node: int
+    start: float
+    end: float
+    speculative: bool = False
+    killed: bool = False
+
+
+@dataclass
+class JobStats:
+    """Per-job service accounting on the shared cluster."""
+
+    job_id: int
+    name: str
+    submit_time: float
+    first_launch: float = _INF   # first task launch (queueing delay ends)
+    map_finish: float = _INF
+    finish: float = _INF
+    n_maps: int = 0
+    n_reduces: int = 0
+
+    @property
+    def queueing_delay(self) -> float:
+        return self.first_launch - self.submit_time
+
+    @property
+    def latency(self) -> float:
+        """Submit -> last task done (the planner's per-job cost)."""
+        return self.finish - self.submit_time
+
+    @property
+    def makespan(self) -> float:
+        """First launch -> last task done (the single-job notion)."""
+        return self.finish - self.first_launch
+
+
+@dataclass
+class WorkloadResult:
+    jobs: list[JobStats]
+    makespan: float                       # absolute time of the last finish
+    node_busy_s: list[float] = field(default_factory=list)
+    slot_utilization: float = 0.0
+    num_speculative_launched: int = 0
+    num_speculative_won: int = 0
+    num_failure_reruns: int = 0
+    records: list[ClusterTaskRecord] = field(default_factory=list)
+
+    def latencies(self) -> np.ndarray:
+        return np.asarray([j.latency for j in self.jobs])
+
+    @property
+    def mean_latency(self) -> float:
+        return float(self.latencies().mean()) if self.jobs else 0.0
+
+    @property
+    def p95_latency(self) -> float:
+        return float(np.percentile(self.latencies(), 95)) if self.jobs else 0.0
+
+
+class _Job:
+    """Mutable per-job scheduler state (single-job simulator state, tagged)."""
+
+    __slots__ = (
+        "jid", "name", "submit", "n_maps", "n_reds", "map_cost", "red_cost",
+        "shuffle", "arrived", "pending_maps", "pending_reduces",
+        "completed_maps", "completed_reduces", "map_output_node",
+        "map_copies", "red_copies", "finished_map_durs", "finished_red_durs",
+        "reducers_launched", "running_maps", "running_reds", "stats",
+    )
+
+    def __init__(self, jid: int, arrival, num_nodes: int):
+        jc = arrival.klass
+        self.jid = jid
+        self.name = jc.name
+        self.submit = arrival.submit_time
+        self.n_maps = jc.n_maps
+        self.n_reds = jc.n_reduces
+        self.map_cost, self.red_cost, self.shuffle = task_costs(
+            jc, num_nodes=num_nodes)
+        self.arrived = False
+        self.pending_maps = deque(range(self.n_maps))
+        self.pending_reduces = deque(range(self.n_reds))
+        self.completed_maps: set[int] = set()
+        self.completed_reduces: set[int] = set()
+        self.map_output_node: dict[int, int] = {}
+        self.map_copies: dict[int, list[int]] = {}
+        self.red_copies: dict[int, list[int]] = {}
+        self.finished_map_durs: list[float] = []
+        self.finished_red_durs: list[float] = []
+        self.reducers_launched = self.n_maps == 0   # no maps -> no slowstart
+        self.running_maps = 0
+        self.running_reds = 0
+        self.stats = JobStats(jid, self.name, self.submit,
+                              n_maps=self.n_maps, n_reduces=self.n_reds)
+
+    def maps_done(self) -> bool:
+        return len(self.completed_maps) == self.n_maps
+
+    def done(self) -> bool:
+        return (self.maps_done()
+                and len(self.completed_reduces) == self.n_reds)
+
+
+def simulate_workload(
+    trace: WorkloadTrace,
+    cluster: ClusterConfig = ClusterConfig(),
+    sim: SimConfig = SimConfig(),
+) -> WorkloadResult:
+    """Run a workload trace on a shared virtual cluster."""
+    rng = random.Random(sim.seed)
+    n_nodes = max(1, cluster.num_nodes)
+    map_slots = [cluster.map_slots_per_node] * n_nodes
+    red_slots = [cluster.reduce_slots_per_node] * n_nodes
+    fair = cluster.scheduler == "fair"
+
+    jobs = [_Job(a.job_id, a, n_nodes) for a in trace.arrivals]
+    by_id = {j.jid: j for j in jobs}
+    res = WorkloadResult(jobs=[j.stats for j in jobs], makespan=0.0)
+
+    # running[uid] = (jid, kind, index, node, start, end, speculative)
+    running: dict[int, tuple] = {}
+    reduce_durs: dict[int, tuple[float, float]] = {}   # uid -> (shuffle, work)
+    uid_counter = 0
+    seq_counter = 0
+    clock = 0.0
+
+    # Event heap: (time, order_class, seq, tag, payload).  order_class makes
+    # simultaneous events deterministic: failures first, then arrivals, then
+    # task completions (matching the single-job simulator, which applies a
+    # failure before any completion at the same timestamp).
+    events: list[tuple] = []
+
+    def push(time: float, order_class: int, tag: str, payload: int) -> None:
+        nonlocal seq_counter
+        heapq.heappush(events, (time, order_class, seq_counter, tag, payload))
+        seq_counter += 1
+
+    for ftime, fnode in sorted(sim.node_failures):
+        push(ftime, 0, "fail", fnode)
+    for j in jobs:
+        push(j.submit, 1, "arrive", j.jid)
+
+    def free_slot(slots: list[int], prefer_not: int = -1) -> int:
+        order = sorted(range(n_nodes), key=lambda nd: (nd == prefer_not, -slots[nd]))
+        for nd in order:
+            if slots[nd] > 0:
+                return nd
+        return -1
+
+    def launch(job: _Job, kind: str, index: int, now: float, *,
+               speculative: bool = False, avoid_node: int = -1) -> bool:
+        nonlocal uid_counter
+        slots = map_slots if kind == "map" else red_slots
+        node = free_slot(slots, prefer_not=avoid_node)
+        if node < 0:
+            return False
+        slots[node] -= 1
+        uid = uid_counter
+        uid_counter += 1
+        job.stats.first_launch = min(job.stats.first_launch, now)
+        if kind == "map":
+            dur = _duration(job.map_cost, rng, sim)
+            end = now + dur
+            running[uid] = (job.jid, kind, index, node, now, end, speculative)
+            job.map_copies.setdefault(index, []).append(uid)
+            job.running_maps += 1
+            push(end, 2, "task", uid)
+        else:
+            sh = _duration(job.shuffle, rng, sim) if job.shuffle > 0 else 0.0
+            wk = _duration(job.red_cost, rng, sim) if job.red_cost > 0 else 0.0
+            reduce_durs[uid] = (sh, wk)
+            job.red_copies.setdefault(index, []).append(uid)
+            job.running_reds += 1
+            if job.maps_done():
+                end = now + sh + wk
+                running[uid] = (job.jid, kind, index, node, now, end, speculative)
+                push(end, 2, "task", uid)
+            else:
+                # Shuffle overlaps the job's maps; completion scheduled when
+                # its last map output lands.
+                running[uid] = (job.jid, kind, index, node, now, _INF, speculative)
+        if speculative:
+            res.num_speculative_launched += 1
+        return True
+
+    def schedule_waiting_reduces(job: _Job, now: float) -> None:
+        for uid, (jid, kind, index, node, start, end, spec) in list(running.items()):
+            if jid == job.jid and kind == "reduce" and end == _INF:
+                sh, wk = reduce_durs[uid]
+                new_end = max(now, start + sh) + wk
+                running[uid] = (jid, kind, index, node, start, new_end, spec)
+                push(new_end, 2, "task", uid)
+
+    # ---------------- scheduling policy ----------------
+
+    def pick_job(kind: str):
+        """The job the next free ``kind`` slot goes to, or None."""
+        best = None
+        best_key = None
+        for j in jobs:
+            if not j.arrived:
+                continue
+            if kind == "map":
+                if not j.pending_maps:
+                    continue
+                load = j.running_maps
+            else:
+                if not (j.reducers_launched and j.pending_reduces):
+                    continue
+                load = j.running_reds
+            # fair = equal per-job shares of each pool (JobClass.weight is
+            # arrival frequency, not a scheduling share — the vector model
+            # splits the same way, so evaluate() and exact_cost() agree on
+            # what "fair" means)
+            key = ((load,) if fair else ()) + (j.submit, j.jid)
+            if best_key is None or key < best_key:
+                best, best_key = j, key
+        return best
+
+    def fill_slots(now: float) -> None:
+        for kind, slots in (("map", map_slots), ("reduce", red_slots)):
+            while sum(slots) > 0:
+                j = pick_job(kind)
+                if j is None:
+                    break
+                pend = j.pending_maps if kind == "map" else j.pending_reduces
+                if not launch(j, kind, pend[0], now):
+                    break
+                pend.popleft()
+
+    def maybe_speculate(now: float) -> None:
+        if not sim.speculative_execution:
+            return
+        for uid, (jid, kind, index, node, start, end, spec) in list(running.items()):
+            if spec or end == _INF:
+                continue
+            j = by_id[jid]
+            if kind == "map":
+                durs, completed, copies = (j.finished_map_durs,
+                                           j.completed_maps, j.map_copies)
+            else:
+                if not j.maps_done():    # stalled shuffle != straggler
+                    continue
+                durs, completed, copies = (j.finished_red_durs,
+                                           j.completed_reduces, j.red_copies)
+            if len(durs) < sim.speculative_min_completed:
+                continue
+            if index in completed or len(copies.get(index, [])) > 1:
+                continue
+            mean = sum(durs) / len(durs)
+            # reduces measure from the job's map finish: shuffle stall is
+            # waiting, not work (mirrors the single-job simulator)
+            eff_start = start if kind == "map" \
+                else max(start, j.stats.map_finish)
+            projected = end - eff_start
+            if projected > sim.speculative_slowdown_thr * mean and now > eff_start:
+                launch(j, kind, index, now, speculative=True, avoid_node=node)
+
+    def fail_node(fnode: int, ftime: float) -> None:
+        for uid, (jid, kind, index, node, start, end, spec) in list(running.items()):
+            if node != fnode:
+                continue
+            del running[uid]
+            j = by_id[jid]
+            copies = j.map_copies if kind == "map" else j.red_copies
+            if uid in copies.get(index, []):
+                copies[index].remove(uid)
+            if kind == "map":
+                j.running_maps -= 1
+                if index not in j.completed_maps and index not in j.pending_maps:
+                    j.pending_maps.append(index)
+            else:
+                j.running_reds -= 1
+                if (index not in j.completed_reduces
+                        and index not in j.pending_reduces):
+                    j.pending_reduces.append(index)
+            res.records.append(
+                ClusterTaskRecord(jid, kind, index, node, start, ftime,
+                                  spec, killed=True))
+            res.num_failure_reruns += 1
+        # Completed map outputs on the failed node are lost for every job
+        # whose reducers still need them.
+        for j in jobs:
+            if len(j.completed_reduces) >= j.n_reds:
+                continue
+            for midx, mnode in list(j.map_output_node.items()):
+                if mnode == fnode and midx in j.completed_maps:
+                    j.completed_maps.discard(midx)
+                    del j.map_output_node[midx]
+                    if midx not in j.pending_maps:
+                        j.pending_maps.append(midx)
+                    res.num_failure_reruns += 1
+        map_slots[fnode] = 0
+        red_slots[fnode] = 0
+
+    def finish_job(job: _Job, now: float) -> None:
+        if job.done() and not job.pending_maps and not job.pending_reduces:
+            job.stats.finish = now
+
+    # ---------------- event loop ----------------
+
+    while events:
+        t, oc, _seq, tag, payload = heapq.heappop(events)
+        clock = max(clock, t)
+
+        if tag == "fail":
+            fail_node(payload, t)
+            fill_slots(clock)
+            continue
+
+        if tag == "arrive":
+            by_id[payload].arrived = True
+            fill_slots(clock)
+            continue
+
+        uid = payload
+        if uid not in running:
+            continue                     # killed or superseded copy
+        if running[uid][5] != t:
+            continue                     # reduce end was rescheduled
+        jid, kind, index, node, start, end, spec = running[uid]
+        job = by_id[jid]
+        if kind == "reduce" and not job.maps_done():
+            # A failure resurrected map work; stall until it lands again.
+            running[uid] = (jid, kind, index, node, start, _INF, spec)
+            continue
+        del running[uid]
+        res.records.append(
+            ClusterTaskRecord(jid, kind, index, node, start, end, spec))
+
+        if kind == "map":
+            map_slots[node] += 1
+            job.running_maps -= 1
+            if index not in job.completed_maps:
+                job.completed_maps.add(index)
+                job.map_output_node[index] = node
+                job.finished_map_durs.append(end - start)
+                if spec:
+                    res.num_speculative_won += 1
+                for sib in job.map_copies.get(index, []):
+                    if sib != uid and sib in running:
+                        _, k2, i2, n2, s2, e2, sp2 = running.pop(sib)
+                        map_slots[n2] += 1
+                        job.running_maps -= 1
+                        res.records.append(ClusterTaskRecord(
+                            jid, k2, i2, n2, s2, clock, sp2, killed=True))
+                job.map_copies[index] = []
+            job.stats.map_finish = (clock if job.maps_done()
+                                    else job.stats.map_finish)
+            if (not job.reducers_launched and job.n_maps > 0
+                    and len(job.completed_maps)
+                    >= cluster.reduce_slowstart * job.n_maps):
+                job.reducers_launched = True
+            fill_slots(clock)
+            if job.maps_done() and not job.pending_maps:
+                schedule_waiting_reduces(job, clock)
+            maybe_speculate(clock)
+            if job.n_reds == 0:
+                finish_job(job, clock)
+        else:
+            red_slots[node] += 1
+            job.running_reds -= 1
+            if index not in job.completed_reduces:
+                job.completed_reduces.add(index)
+                # stall-free duration (see maybe_speculate)
+                job.finished_red_durs.append(
+                    end - max(start, job.stats.map_finish))
+                if spec:
+                    res.num_speculative_won += 1
+                for sib in job.red_copies.get(index, []):
+                    if sib != uid and sib in running:
+                        _, k2, i2, n2, s2, e2, sp2 = running.pop(sib)
+                        red_slots[n2] += 1
+                        job.running_reds -= 1
+                        res.records.append(ClusterTaskRecord(
+                            jid, k2, i2, n2, s2, clock, sp2, killed=True))
+                job.red_copies[index] = []
+            fill_slots(clock)
+            maybe_speculate(clock)
+            finish_job(job, clock)
+
+        res.makespan = max(res.makespan, clock)
+
+    # ---------------- slot-occupancy summary ----------------
+    res.node_busy_s = [0.0] * n_nodes
+    for rec in res.records:
+        res.node_busy_s[rec.node] += rec.end - rec.start
+    span = res.makespan
+    slot_seconds = span * n_nodes * (
+        cluster.map_slots_per_node + cluster.reduce_slots_per_node)
+    if slot_seconds > 0:
+        res.slot_utilization = sum(res.node_busy_s) / slot_seconds
+    return res

@@ -1,0 +1,254 @@
+"""Multi-job workloads over the canonical MapReduce job profiles.
+
+The paper costs a *single* job; a production cluster serves a stream of
+them.  This module describes that stream:
+
+* :class:`JobClass` — a job template: Table-1 parameters (mappers, reducers,
+  sort buffer, ...) plus Table-2/3 profile statistics and cost factors for
+  one of the :data:`repro.mapreduce.jobs.JOBS` profiles.  Per-task costs
+  come from the paper's job model (:func:`task_costs`), exactly as in the
+  single-job simulator.
+* :class:`WorkloadTrace` — a sorted sequence of :class:`JobArrival` events.
+* Trace generators — :func:`poisson_trace` (open-loop Poisson arrivals),
+  :func:`bursty_trace` (on/off bursts), :func:`replayed_trace` (explicit
+  submit times, e.g. replayed from a production log).
+
+Traces are generated at a *unit* arrival rate and rescaled with
+:func:`rescale`, so "arrival rate" can be a searched axis of the capacity
+planner without regenerating (or re-uploading) the trace.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.hadoop.params import CostFactors, HadoopParams, MiB, ProfileStats
+from repro.core.hadoop.ref import job_model
+from repro.mapreduce.jobs import JOBS
+
+__all__ = [
+    "JobClass",
+    "JobArrival",
+    "WorkloadTrace",
+    "task_costs",
+    "shuffle_full",
+    "default_job_classes",
+    "poisson_trace",
+    "bursty_trace",
+    "replayed_trace",
+    "rescale",
+]
+
+
+@dataclass(frozen=True)
+class JobClass:
+    """A job template: one row of a workload mix.
+
+    ``params`` carries the job-shaped Table-1 knobs (``pNumMappers``,
+    ``pNumReducers``, ``pSortMB``...); cluster-shaped knobs (nodes, slots,
+    slowstart) are supplied by the scheduler configuration at simulation
+    time, so one class can be costed on any candidate cluster.
+    """
+
+    name: str
+    params: HadoopParams
+    stats: ProfileStats
+    costs: CostFactors
+    weight: float = 1.0      # relative arrival frequency in generated traces
+
+    @property
+    def n_maps(self) -> int:
+        return self.params.pNumMappers
+
+    @property
+    def n_reduces(self) -> int:
+        return self.params.pNumReducers
+
+
+def task_costs(jc: JobClass, *, num_nodes: int | None = None
+               ) -> tuple[float, float, float]:
+    """(map task cost, reduce task cost, per-reducer shuffle seconds).
+
+    The same composition the single-job simulator uses: per-task I/O + CPU
+    from the §2-§4 models, plus each reducer's serialized share of the
+    network transfer (Eqs. 90-91).  ``num_nodes`` is the *cluster's* node
+    count — it sets the remote fraction ``(n-1)/n`` of the shuffle, which is
+    a capacity-planning knob, not a property of the job.
+    """
+    p = jc.params
+    if num_nodes is not None:
+        p = p.replace(pNumNodes=num_nodes)
+    jm = job_model(p, jc.stats, jc.costs)
+    map_cost = jm.map.ioCost + jm.map.cpuCost
+    red_cost = jm.reduce.ioCost + jm.reduce.cpuCost if p.pNumReducers else 0.0
+    shuffle = jm.netCost / p.pNumReducers if p.pNumReducers else 0.0
+    return map_cost, red_cost, shuffle
+
+
+def shuffle_full(jc: JobClass) -> float:
+    """Per-reducer shuffle seconds in the all-remote limit ((n-1)/n -> 1).
+
+    The vectorized simulator stores this node-independent constant per job
+    and applies the remote fraction of each candidate cluster on device.
+    """
+    if jc.params.pNumReducers == 0:
+        return 0.0
+    jm = job_model(jc.params, jc.stats, jc.costs)
+    size = jm.map.intermDataSize * jc.params.pNumMappers         # Eq. 90, frac=1
+    return size * jc.costs.cNetworkCost / jc.params.pNumReducers
+
+
+@dataclass(frozen=True)
+class JobArrival:
+    job_id: int
+    klass: JobClass
+    submit_time: float
+
+
+@dataclass(frozen=True)
+class WorkloadTrace:
+    """Arrivals sorted by (submit_time, job_id) — the FIFO service order."""
+
+    arrivals: tuple[JobArrival, ...]
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "arrivals",
+            tuple(sorted(self.arrivals, key=lambda a: (a.submit_time, a.job_id))),
+        )
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.arrivals)
+
+    @property
+    def submit_times(self) -> np.ndarray:
+        return np.asarray([a.submit_time for a in self.arrivals])
+
+
+def rescale(trace: WorkloadTrace, rate: float) -> WorkloadTrace:
+    """Speed a unit-rate trace up (rate > 1) or down: times scale by 1/rate."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    return WorkloadTrace(tuple(
+        JobArrival(a.job_id, a.klass, a.submit_time / rate)
+        for a in trace.arrivals
+    ))
+
+
+# --------------------------------------------------------------------------
+# the default workload mix
+# --------------------------------------------------------------------------
+
+# Table-2-style profiles for the canonical jobs of repro.mapreduce.jobs,
+# derived from the map/reduce functions' semantics (see that module): each
+# wordcount record emits 4 twelve-byte pairs, filter keeps an exact 20%,
+# aggregate's combiner collapses the key space to 256 hot keys, sort moves
+# every byte through unchanged.
+_PROFILES: dict[str, dict] = {
+    "wordcount": dict(
+        stats=ProfileStats(sInputPairWidth=400.0, sMapPairsSel=4.0,
+                           sMapSizeSel=4 * 12.0 / 400.0,
+                           sCombinePairsSel=0.3, sCombineSizeSel=0.3),
+        params=dict(pUseCombine=True, pNumMappers=16, pNumReducers=4),
+        weight=4.0,
+    ),
+    "sort": dict(
+        stats=ProfileStats(sInputPairWidth=100.0),
+        params=dict(pNumMappers=32, pNumReducers=8),
+        weight=1.0,
+    ),
+    "filter": dict(
+        stats=ProfileStats(sInputPairWidth=200.0, sMapPairsSel=0.2,
+                           sMapSizeSel=0.2),
+        params=dict(pNumMappers=16, pNumReducers=2),
+        weight=3.0,
+    ),
+    "aggregate": dict(
+        stats=ProfileStats(sInputPairWidth=64.0, sMapSizeSel=16.0 / 64.0,
+                           sCombinePairsSel=0.05, sCombineSizeSel=0.05),
+        params=dict(pUseCombine=True, pNumMappers=16, pNumReducers=2),
+        weight=2.0,
+    ),
+}
+
+
+def default_job_classes(
+    *,
+    split_size: float = 64 * MiB,
+    costs: CostFactors | None = None,
+    names: Sequence[str] | None = None,
+) -> list[JobClass]:
+    """The standard 4-class mix over :data:`repro.mapreduce.jobs.JOBS`."""
+    c = costs if costs is not None else CostFactors()
+    out = []
+    for name in (names if names is not None else _PROFILES):
+        if name not in JOBS:
+            raise KeyError(f"unknown job profile: {name!r}")
+        prof = _PROFILES[name]
+        p = HadoopParams(pSplitSize=split_size, **prof["params"])
+        out.append(JobClass(name=name, params=p, stats=prof["stats"],
+                            costs=c, weight=prof["weight"]))
+    return out
+
+
+# --------------------------------------------------------------------------
+# trace generators (all unit-rate; compose with rescale())
+# --------------------------------------------------------------------------
+
+
+def _pick_classes(classes: Sequence[JobClass], n: int,
+                  rng: np.random.Generator) -> list[JobClass]:
+    w = np.asarray([jc.weight for jc in classes], dtype=np.float64)
+    idx = rng.choice(len(classes), size=n, p=w / w.sum())
+    return [classes[i] for i in idx]
+
+
+def poisson_trace(classes: Sequence[JobClass], n_jobs: int, *,
+                  rate: float = 1.0, seed: int = 0) -> WorkloadTrace:
+    """Open-loop Poisson arrivals: exponential gaps of mean ``1/rate``."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_jobs)
+    times = np.cumsum(gaps) - gaps[0]          # first job arrives at t=0
+    picks = _pick_classes(classes, n_jobs, rng)
+    return WorkloadTrace(tuple(
+        JobArrival(i, jc, float(t)) for i, (jc, t) in enumerate(zip(picks, times))
+    ))
+
+
+def bursty_trace(classes: Sequence[JobClass], n_bursts: int, burst_size: int, *,
+                 burst_gap: float = 60.0, intra_gap: float = 0.5,
+                 seed: int = 0) -> WorkloadTrace:
+    """On/off arrivals: ``n_bursts`` bursts of ``burst_size`` near-simultaneous
+    jobs, ``burst_gap`` apart — the worst case for FIFO tail latency."""
+    rng = np.random.default_rng(seed)
+    picks = _pick_classes(classes, n_bursts * burst_size, rng)
+    arrivals = []
+    jid = 0
+    for b in range(n_bursts):
+        for k in range(burst_size):
+            arrivals.append(JobArrival(jid, picks[jid],
+                                       b * burst_gap + k * intra_gap))
+            jid += 1
+    return WorkloadTrace(tuple(arrivals))
+
+
+def replayed_trace(times: Sequence[float],
+                   classes: Sequence[JobClass] | Mapping[int, JobClass],
+                   *, seed: int = 0) -> WorkloadTrace:
+    """Replay explicit submit times (e.g. from a production log).
+
+    ``classes`` is either a per-job mapping (job index -> class) or a pool
+    to sample from by weight.
+    """
+    n = len(times)
+    if isinstance(classes, Mapping):
+        picks = [classes[i] for i in range(n)]
+    else:
+        picks = _pick_classes(list(classes), n, np.random.default_rng(seed))
+    return WorkloadTrace(tuple(
+        JobArrival(i, jc, float(t)) for i, (t, jc) in enumerate(zip(times, picks))
+    ))

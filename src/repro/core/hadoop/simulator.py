@@ -14,19 +14,26 @@ our TPU runtime mirrors (see ``repro.runtime.stragglers``):
 
 * **slowstart**      — reducers launch once ``pReduceSlowstart`` of maps done;
 * **stragglers**     — per-task multiplicative slowdowns (seeded RNG);
-* **speculative execution** — Hadoop-style backup tasks for outliers;
+* **speculative execution** — Hadoop-style backup tasks for outlier maps
+  *and* reduces (backup reduces are only considered once every map output
+  exists, so a shuffle stalled on the map fleet is not mistaken for a
+  straggler);
 * **node failures**  — at a failure time, running tasks are re-queued and
   *completed map outputs on the failed node are re-executed* (Hadoop
   semantics: map output lives on local disk of the mapper).
 
 Determinism: all randomness comes from a seeded ``random.Random``; repeated
 runs with the same seed are bit-identical (tested).
+
+The multi-job cluster simulator (:mod:`repro.cluster.sched`) extends the
+same mechanics to a shared cluster of concurrent jobs.
 """
 
 from __future__ import annotations
 
 import heapq
 import random
+from collections import deque
 from dataclasses import dataclass, field
 
 from .params import CostFactors, HadoopParams, ProfileStats
@@ -71,6 +78,12 @@ class SimResult:
     map_task_cost: float = 0.0
     reduce_task_cost: float = 0.0
     shuffle_time_per_reducer: float = 0.0
+    # Per-node seconds a slot was occupied by a task (including killed and
+    # speculative copies — the slot was held either way), and the fraction
+    # of nominal slot-seconds (makespan x all configured slots) that was
+    # busy.  Failed nodes keep their nominal capacity in the denominator.
+    node_busy_s: list[float] = field(default_factory=list)
+    slot_utilization: float = 0.0
 
 
 def _duration(base: float, rng: random.Random, sc: SimConfig) -> float:
@@ -110,7 +123,9 @@ def simulate_job(
     red_slots = [p.pMaxRedPerNode] * n_nodes
 
     # --- state ---
-    pending_maps = list(range(p.pNumMappers))
+    # deques: the multi-thousand-task workloads of the cluster layer made
+    # the old list-head pops an O(n^2) hotspot
+    pending_maps = deque(range(p.pNumMappers))
     completed_maps: set[int] = set()
     map_output_node: dict[int, int] = {}
     running: dict[int, tuple[str, int, int, float, float, bool]] = {}
@@ -122,11 +137,13 @@ def simulate_job(
     #   end = max(last_map_time, start + shuffle) + work.
     reduce_durs: dict[int, tuple[float, float]] = {}  # uid -> (shuffle, work)
     uid_counter = 0
-    # map index -> list of running uids (primary + speculative copies)
+    # task index -> list of running uids (primary + speculative copies)
     map_copies: dict[int, list[int]] = {}
+    red_copies: dict[int, list[int]] = {}
     finished_map_durations: list[float] = []
+    finished_red_durations: list[float] = []
 
-    pending_reduces = list(range(p.pNumReducers))
+    pending_reduces = deque(range(p.pNumReducers))
     reducers_launched = False
     completed_reduces: set[int] = set()
 
@@ -166,6 +183,7 @@ def simulate_job(
             sh = _duration(shuffle_net, rng, sim) if shuffle_net > 0 else 0.0
             wk = _duration(red_cost, rng, sim) if red_cost > 0 else 0.0
             reduce_durs[uid] = (sh, wk)
+            red_copies.setdefault(index, []).append(uid)
             if all_maps_done():
                 end = now + sh + wk
                 running[uid] = (kind, index, node, now, end, speculative)
@@ -188,26 +206,43 @@ def simulate_job(
 
     def fill_map_slots(now: float) -> None:
         while pending_maps and launch("map", pending_maps[0], now):
-            pending_maps.pop(0)
+            pending_maps.popleft()
 
     def fill_reduce_slots(now: float) -> None:
         while pending_reduces and launch("reduce", pending_reduces[0], now):
-            pending_reduces.pop(0)
+            pending_reduces.popleft()
 
     def maybe_speculate(now: float) -> None:
+        """Hadoop-style backup tasks for outliers, maps and reduces alike.
+
+        Reduce tasks are only candidates once every map output exists: a
+        first-wave reducer stalled on the map fleet looks slow without being
+        a straggler, and its backup would stall the same way.
+        """
         if not sim.speculative_execution:
             return
-        if len(finished_map_durations) < sim.speculative_min_completed:
-            return
-        mean = sum(finished_map_durations) / len(finished_map_durations)
-        for uid, (kind, index, node, start, end, spec) in list(running.items()):
-            if kind != "map" or spec:
-                continue
-            if index in completed_maps or len(map_copies.get(index, [])) > 1:
-                continue
-            projected = end - start
-            if projected > sim.speculative_slowdown_thr * mean and now > start:
-                launch("map", index, now, speculative=True, avoid_node=node)
+
+        def scan(kind, durations, completed, copies):
+            if len(durations) < sim.speculative_min_completed:
+                return
+            mean = sum(durations) / len(durations)
+            for uid, (k, index, node, start, end, spec) in list(running.items()):
+                if k != kind or spec or end == float("inf"):
+                    continue
+                if index in completed or len(copies.get(index, [])) > 1:
+                    continue
+                # Measure reduces from the map-fleet finish, not their
+                # launch: a first-wave reducer's shuffle stall is waiting,
+                # not work, and would miscalibrate the straggler baseline.
+                eff_start = start if kind == "map" \
+                    else max(start, res.map_finish_time)
+                projected = end - eff_start
+                if projected > sim.speculative_slowdown_thr * mean and now > eff_start:
+                    launch(kind, index, now, speculative=True, avoid_node=node)
+
+        scan("map", finished_map_durations, completed_maps, map_copies)
+        if all_maps_done():
+            scan("reduce", finished_red_durations, completed_reduces, red_copies)
 
     fill_map_slots(0.0)
 
@@ -223,8 +258,9 @@ def simulate_job(
                 if node != fnode:
                     continue
                 del running[uid]
-                if kind == "map" and uid in map_copies.get(index, []):
-                    map_copies[index].remove(uid)
+                copies = map_copies if kind == "map" else red_copies
+                if uid in copies.get(index, []):
+                    copies[index].remove(uid)
                 res.records.append(
                     TaskRecord(kind, index, node, start, ftime, spec, killed=True)
                 )
@@ -249,7 +285,8 @@ def simulate_job(
             map_slots[fnode] = 0
             red_slots[fnode] = 0
             fill_map_slots(clock)
-            fill_reduce_slots(clock)
+            if reducers_launched:   # a failure must not bypass slowstart
+                fill_reduce_slots(clock)
             continue
 
         t, uid, kind, index = heapq.heappop(events)
@@ -299,9 +336,33 @@ def simulate_job(
             maybe_speculate(clock)
         else:
             red_slots[node] += 1
-            completed_reduces.add(index)
+            # First copy to finish wins; kill the sibling backups.
+            if index not in completed_reduces:
+                completed_reduces.add(index)
+                # stall-free duration (see maybe_speculate)
+                finished_red_durations.append(
+                    end - max(start, res.map_finish_time))
+                if spec:
+                    res.num_speculative_won += 1
+                for sib in red_copies.get(index, []):
+                    if sib != uid and sib in running:
+                        k2, i2, n2, s2, e2, sp2 = running.pop(sib)
+                        red_slots[n2] += 1
+                        res.records.append(
+                            TaskRecord(k2, i2, n2, s2, clock, sp2, killed=True)
+                        )
+                red_copies[index] = []
             fill_reduce_slots(clock)
+            maybe_speculate(clock)
 
         res.makespan = max(res.makespan, clock)
+
+    # --- slot-occupancy summary (consumed by the cluster layer) ---
+    res.node_busy_s = [0.0] * n_nodes
+    for rec in res.records:
+        res.node_busy_s[rec.node] += rec.end - rec.start
+    slot_seconds = res.makespan * n_nodes * (p.pMaxMapsPerNode + p.pMaxRedPerNode)
+    if slot_seconds > 0:
+        res.slot_utilization = sum(res.node_busy_s) / slot_seconds
 
     return res

@@ -54,6 +54,8 @@ __all__ = [
     "cached_evaluator",
     "evaluate_unchunked",
     "apply_assignment",
+    "split_overrides",
+    "pad_block",
 ]
 
 
@@ -171,6 +173,58 @@ class Evaluator:
         return "j_totalCost"
 
 
+def split_overrides(
+    base_cfg: Mapping[str, Any], overrides: Mapping[str, Any]
+) -> tuple[dict[str, np.ndarray], dict[str, Any], int]:
+    """Validate + cast an override mapping against ``base_cfg``: 1-D values
+    become batched ``(n,)`` columns sharing one length, scalars are merged
+    onto the base as statics.  Each override takes ``base_cfg``'s dtype for
+    its key, so service-normalized rows and direct calls see bit-identical
+    inputs.  One implementation shared by every chunked evaluator (Hadoop
+    job model here, cluster planner in :mod:`repro.cluster.evaluator`) so
+    the contract cannot drift."""
+    static = dict(base_cfg)
+    batched: dict[str, np.ndarray] = {}
+    n = None
+    for k, v in overrides.items():
+        if k not in base_cfg:
+            raise KeyError(f"unknown config key: {k!r}")
+        arr = jnp.asarray(v, dtype=base_cfg[k].dtype)
+        if arr.ndim > 1:
+            raise ValueError(f"override {k!r} must be scalar or 1-D")
+        if arr.ndim == 1:
+            if n is None:
+                n = arr.shape[0]
+            elif arr.shape[0] != n:
+                raise ValueError("all batched overrides must share a length")
+            batched[k] = np.asarray(arr)
+        else:
+            static[k] = arr
+    if n is None:
+        raise ValueError("at least one override must be batched")
+    if n == 0:
+        raise ValueError("batched overrides are empty (0-length grid)")
+    return batched, static, n
+
+
+def pad_block(
+    batched: Mapping[str, np.ndarray], start: int, stop: int, chunk: int
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """One ``(chunk,)``-padded slice ``[start, stop)``: edge-replicated
+    values + liveness mask.  Static shape => one compile per key-set for
+    any grid size."""
+    n = stop - start
+    pad = chunk - n
+    cols = {}
+    for k, v in batched.items():
+        sl = v[start:stop]
+        cols[k] = np.concatenate([sl, np.full(pad, sl[-1], dtype=sl.dtype)]) \
+            if pad else sl
+    mask = np.zeros(chunk, dtype=bool)
+    mask[:n] = True
+    return cols, mask
+
+
 def evaluate_unchunked(
     base_cfg: dict,
     overrides: Mapping[str, jnp.ndarray],
@@ -272,42 +326,11 @@ class ChunkedEvaluator(Evaluator):
     def _split(self, overrides: Mapping[str, Any]):
         """Validate + cast overrides; split into batched columns and scalar
         (static) overrides merged onto the base config."""
-        static = dict(self.base_cfg)
-        batched: dict[str, np.ndarray] = {}
-        n = None
-        for k, v in overrides.items():
-            if k not in self.base_cfg:
-                raise KeyError(f"unknown config key: {k!r}")
-            arr = jnp.asarray(v, dtype=self.base_cfg[k].dtype)
-            if arr.ndim > 1:
-                raise ValueError(f"override {k!r} must be scalar or 1-D")
-            if arr.ndim == 1:
-                if n is None:
-                    n = arr.shape[0]
-                elif arr.shape[0] != n:
-                    raise ValueError("all batched overrides must share a length")
-                batched[k] = np.asarray(arr)
-            else:
-                static[k] = arr
-        if n is None:
-            raise ValueError("at least one override must be batched")
-        if n == 0:
-            raise ValueError("batched overrides are empty (0-length grid)")
-        return batched, static, n
+        return split_overrides(self.base_cfg, overrides)
 
     def _pad(self, batched: Mapping[str, np.ndarray], start: int, stop: int):
-        """One (chunk,)-padded slice [start, stop): edge-replicated values +
-        liveness mask.  Static shape => one compile for any grid size."""
-        n = stop - start
-        pad = self.chunk - n
-        cols = {}
-        for k, v in batched.items():
-            sl = v[start:stop]
-            cols[k] = np.concatenate([sl, np.full(pad, sl[-1], dtype=sl.dtype)]) \
-                if pad else sl
-        mask = np.zeros(self.chunk, dtype=bool)
-        mask[:n] = True
-        return cols, mask
+        """One (chunk,)-padded slice (see :func:`pad_block`)."""
+        return pad_block(batched, start, stop, self.chunk)
 
     # ---------------- public API ----------------
 

@@ -88,3 +88,42 @@ def test_map_only_job():
     r = simulate_job(p0, S, C, SimConfig(speculative_execution=False))
     assert r.makespan == pytest.approx(r.map_finish_time)
     assert all(rec.kind == "map" for rec in r.records)
+
+
+def test_reduce_speculation_launches_backups():
+    """Reduce stragglers get Hadoop-style backup tasks too (they used to be
+    map-only, diverging from the documented semantics)."""
+    sc = SimConfig(seed=9, straggler_prob=0.3, straggler_slowdown=8.0,
+                   speculative_execution=True, speculative_min_completed=2)
+    r = simulate_job(P, S, C, sc)
+    spec_reduces = [rec for rec in r.records
+                    if rec.kind == "reduce" and rec.speculative]
+    assert spec_reduces, "no speculative reduce copies launched"
+    no_spec = simulate_job(P, S, C, SimConfig(
+        seed=9, straggler_prob=0.3, straggler_slowdown=8.0,
+        speculative_execution=False))
+    assert r.makespan <= no_spec.makespan
+    # every reduce index still completes exactly once (first copy wins)
+    done = {rec.index for rec in r.records
+            if rec.kind == "reduce" and not rec.killed}
+    assert done == set(range(P.pNumReducers))
+
+
+def test_node_failure_does_not_bypass_slowstart():
+    """A failure used to fill reduce slots unconditionally, launching
+    reducers before the slowstart threshold."""
+    p = P.replace(pReduceSlowstart=1.0)     # reducers only after ALL maps
+    r = simulate_job(p, S, C, SimConfig(
+        speculative_execution=False, node_failures=((1.0, 3),)))
+    first_reduce = min(rec.start for rec in r.records if rec.kind == "reduce")
+    assert first_reduce >= r.map_finish_time
+
+
+def test_slot_utilization_summary():
+    r = simulate_job(P, S, C, SimConfig(speculative_execution=False))
+    assert len(r.node_busy_s) == P.pNumNodes
+    assert sum(r.node_busy_s) == pytest.approx(
+        sum(rec.end - rec.start for rec in r.records))
+    assert 0.0 < r.slot_utilization <= 1.0
+    # uniform tasks on a divisible cluster keep every node equally busy
+    assert max(r.node_busy_s) == pytest.approx(min(r.node_busy_s), rel=1e-6)
