@@ -1,0 +1,65 @@
+"""The typed API tour: one facade, per-phase costs, phase-aware what-ifs.
+
+Everything the paper computes, through `repro.api` + `repro.spec` instead
+of prefixed dict keys:
+
+1. SPEC     a typed JobSpec (Tables 1-3 as one value).
+2. MODEL    one config -> a CostReport whose fields carry paper Eq numbers.
+3. SWEEP    a batched report; phases sum to Eq. 98's total.
+4. TUNE     coordinate descent over an axis-validated space.
+5. SERVE    async phase-level what-if: "which config minimizes *shuffle*
+            time, subject to total job cost <= budget?" — the query the
+            flat j_totalCost-only API could not express.
+
+Run:  PYTHONPATH=src python examples/phase_whatif.py
+"""
+
+import numpy as np
+
+import repro.api as api
+from repro.core.hadoop import HadoopParams, MiB
+from repro.spec import JobSpec, PhaseBreakdown
+
+# ---- 1: a typed spec (flat-key overrides route+coerce onto the tables) ----
+spec = JobSpec(
+    HadoopParams(pNumNodes=8, pNumMappers=64, pNumReducers=16,
+                 pSplitSize=128 * MiB),
+    name="wordcount-ish",
+).replace(sMapSizeSel=0.8, sReduceSizeSel=0.5)
+
+# ---- 2: one configuration -> per-phase report with paper provenance ----
+rep = api.model(spec, {"pSortMB": 100.0, "pSortFactor": 10.0})
+print("== per-phase cost report (job-level seconds) ==")
+for phase in PhaseBreakdown.names():
+    print(f"  {phase:13s} {float(rep.phases[phase][0]):8.2f}s   "
+          f"[{PhaseBreakdown.eq(phase)}]")
+print(f"  {'total':13s} {float(rep.total_cost[0]):8.2f}s   [Eq. 98] "
+      f"(= io {float(rep.io_cost[0]):.2f} + cpu {float(rep.cpu_cost[0]):.2f} "
+      f"+ net {float(rep.net_cost[0]):.2f})")
+
+# ---- 3+4: sweep and tune through the same facade ----
+space = {
+    "pSortMB": [25.0, 50.0, 100.0, 200.0, 400.0],
+    "pSortFactor": [5.0, 10.0, 25.0],
+    "pNumReducers": [4.0, 8.0, 16.0, 32.0, 64.0],
+}
+tuned = api.tune(spec, space, strategy="descent")
+print(f"\n== tune (axis-validated space) ==\n  best {tuned.best_assignment} "
+      f"cost={tuned.best_cost:.2f}s ({tuned.evaluations} model evals)")
+
+# ---- 5: phase-aware what-if through the async service ----
+grid = {
+    "pSortMB": np.repeat(space["pSortMB"], len(space["pNumReducers"])),
+    "pNumReducers": np.tile(space["pNumReducers"], len(space["pSortMB"])),
+}
+swept = api.sweep(spec, grid)
+budget = float(np.percentile(np.asarray(swept.total_cost), 40))
+with api.serve(spec) as svc:
+    fut = svc.phase_query(grid, phase="shuffle", total_max=budget)
+    fut_any = svc.phase_query(grid, phase="shuffle")
+    best = fut.result().best()
+    unconstrained = fut_any.result().best()
+print(f"\n== phase query: min shuffle s.t. total <= {budget:.2f}s ==")
+print(f"  constrained   : shuffle={best[1]:7.3f}s at {best[2]}")
+print(f"  unconstrained : shuffle={unconstrained[1]:7.3f}s "
+      f"at {unconstrained[2]}")

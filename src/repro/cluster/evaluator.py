@@ -26,21 +26,57 @@ Override keys (the ``base_cfg`` universe):
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Mapping, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.search.evaluator import Evaluator, SearchResult, pad_block, split_overrides
+from repro.search.evaluator import (
+    Evaluator,
+    SearchResult,
+    masked_total,
+    pad_block,
+    split_overrides,
+)
+from repro.spec import Axis, ParamSpace
 
 from .sched import ClusterConfig, simulate_workload
 from .vector_sim import estimate_steps, pack_trace, simulate_batch
 from .workload import JobClass, WorkloadTrace, default_job_classes, poisson_trace, rescale
 
-__all__ = ["ClusterEvaluator"]
+__all__ = ["ClusterEvaluator", "cluster_space"]
 
 _OBJECTIVES = {"mean": "w_meanLat", "p95": "w_p95Lat"}
+
+
+@functools.lru_cache(maxsize=None)
+def cluster_space() -> ParamSpace:
+    """The capacity planner's searchable axes (the ``base_cfg`` universe).
+
+    The axis bounds ARE the planner's knob-validity rule: a row is valid
+    when every (rounded) count is >= 1 and the offered rate is positive —
+    exactly the mask :meth:`ClusterEvaluator.evaluate` applies before the
+    vectorized rollout.  ``pReduceSlowstart`` is a fraction and
+    ``schedFair`` a flag; neither contributes a validity bound.
+    """
+    return ParamSpace([
+        Axis("pNumNodes", kind="int", lower=1, table="Table 1",
+             group="cluster", doc="worker nodes in the candidate cluster"),
+        Axis("pMaxMapsPerNode", kind="int", lower=1, table="Table 1",
+             group="cluster", doc="map slots per node"),
+        Axis("pMaxRedPerNode", kind="int", lower=1, table="Table 1",
+             group="cluster", doc="reduce slots per node"),
+        Axis("pReduceSlowstart", kind="float", lower=None, unit="fraction",
+             table="Table 1", group="cluster",
+             doc="map completion fraction before reducers launch"),
+        Axis("schedFair", kind="bool", group="cluster",
+             doc="fair-share scheduler (0 = FIFO)"),
+        Axis("arrivalRate", kind="float", lower=0, lower_open=True,
+             unit="jobs/s", group="cluster",
+             doc="offered load the unit-rate trace is rescaled to"),
+    ])
 
 
 class ClusterEvaluator(Evaluator):
@@ -106,6 +142,11 @@ class ClusterEvaluator(Evaluator):
     def cost_key(self) -> str:
         return _OBJECTIVES[self._objective]
 
+    @property
+    def param_space(self) -> ParamSpace:
+        """Declared cluster axes — the single source of the knob mask."""
+        return cluster_space()
+
     def evaluate(self, overrides: Mapping[str, Any]) -> SearchResult:
         batched, static, n = split_overrides(self.base_cfg, overrides)
         out_blocks: dict[str, list[np.ndarray]] = {}
@@ -116,7 +157,7 @@ class ClusterEvaluator(Evaluator):
             for k, v in out.items():
                 out_blocks.setdefault(k, []).append(v[: stop - start])
         outputs = {k: np.concatenate(v) for k, v in out_blocks.items()}
-        total = np.where(outputs["valid"] > 0, outputs[self.cost_key], np.inf)
+        total = masked_total(outputs, self.cost_key)
         return SearchResult(overrides=batched, outputs=outputs, total_cost=total)
 
     def exact_cost(self, assignment: Mapping[str, float]) -> float:
@@ -157,7 +198,9 @@ class ClusterEvaluator(Evaluator):
         rate = col("arrivalRate")
         fair = (col("schedFair") > 0.5).astype(np.float64)
         slow = col("pReduceSlowstart")
-        ok = (nodes >= 1) & (mpn >= 1) & (rpn >= 1) & (rate > 0)
+        # the declared axis bounds (int counts >= 1, rate > 0) ARE the mask
+        ok, _ = self.param_space.validity_mask(
+            {k: col(k) for k in self.base_cfg})
         # invalid rows are masked via ``ok``, but still ride the vmapped
         # rollout — sanitize their knobs so a zero-slot lane cannot pin the
         # whole chunk at the step cap (a lane that never finishes keeps the

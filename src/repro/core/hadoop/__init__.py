@@ -1,4 +1,10 @@
-"""Faithful implementation of the paper's Hadoop performance models."""
+"""Faithful implementation of the paper's Hadoop performance models.
+
+The typed public surface over these models — :class:`repro.spec.JobSpec`
+(Tables 1-3 as one value), :class:`repro.spec.CostReport` (per-phase costs
+with Eq numbers) and the :mod:`repro.api` facade — lives one layer up;
+everything here remains the flat, dict-keyed ground truth it adapts.
+"""
 
 from .merge_math import (
     MergePlan,

@@ -18,7 +18,16 @@ Validity: the closed-form merge math requires ``N <= pSortFactor**2``
 (paper §2.3).  The output key ``valid`` is 1.0 where every merge-math
 application was within the closed-form domain; the what-if engine masks or
 penalizes configurations with ``valid == 0`` (the scalar oracle falls back to
-exact simulation instead).
+exact simulation instead).  The three underlying constraints are also
+emitted separately (``m_mergeValid``, ``r_step2Valid``, ``r_step3Valid``)
+so the typed layer can say *which* one failed.
+
+The typed view of this module lives in :mod:`repro.spec`:
+:meth:`repro.spec.JobSpec.pack` produces the input dict (it IS
+:func:`pack_config`), and :meth:`repro.spec.CostReport.from_outputs` lifts
+the flat output dict into per-phase dataclasses carrying the paper
+equation numbers — bit-for-bit, the aggregates are these outputs by
+reference.
 """
 
 from __future__ import annotations

@@ -16,6 +16,12 @@ rules after Eq. 1) is implemented by :func:`apply_initializations`, which
 returns *normalized* copies of the stats / cost factors so that every
 downstream formula can be written without conditionals, exactly as the paper
 intends.
+
+:class:`repro.spec.JobSpec` bundles the three dataclasses into one frozen
+pytree-registered value, and :func:`repro.spec.hadoop_space` exposes each
+field as a declarative :class:`~repro.spec.Axis` (kind, bounds, unit,
+source table) — use those for anything that routes flat float overrides
+back onto these types.
 """
 
 from __future__ import annotations

@@ -31,9 +31,11 @@ from .evaluator import (
     apply_assignment,
     cached_evaluator,
     evaluate_unchunked,
+    masked_total,
+    sanitize_costs,
 )
 from .grid import assignment_at, iter_blocks, sample_space, space_block, space_size
-from .service import QueryResult, QueryStats, WhatIfService
+from .service import PhaseQueryResult, QueryResult, QueryStats, WhatIfService
 from .strategies import (
     TuningResult,
     coordinate_descent,
@@ -56,6 +58,8 @@ __all__ = [
     "cached_evaluator",
     "evaluate_unchunked",
     "apply_assignment",
+    "sanitize_costs",
+    "masked_total",
     "space_size",
     "space_block",
     "iter_blocks",
@@ -75,6 +79,7 @@ __all__ = [
     "WhatIfService",
     "QueryResult",
     "QueryStats",
+    "PhaseQueryResult",
     "TpuEvaluator",
     "mesh_space",
     "tune_tpu",

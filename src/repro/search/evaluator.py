@@ -32,7 +32,7 @@ for the TPU-side tuner, so every strategy in
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
 
 import jax
@@ -44,6 +44,8 @@ from repro import compat
 from repro.core.hadoop.model import job_model_jnp, pack_config
 from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
 from repro.core.hadoop.simulator import SimConfig, simulate_job
+from repro.spec import CostReport, JobSpec, ParamSpace, hadoop_space
+from repro.spec.report import VALIDITY_CONSTRAINTS
 
 __all__ = [
     "InvalidGridError",
@@ -56,6 +58,8 @@ __all__ = [
     "apply_assignment",
     "split_overrides",
     "pad_block",
+    "sanitize_costs",
+    "masked_total",
 ]
 
 
@@ -89,15 +93,6 @@ class SearchResult:
         }
 
 
-def _coerce_field(dc, name: str, value: float):
-    f = dc.__dataclass_fields__[name]
-    if f.type in ("int", int):
-        return int(round(value))
-    if f.type in ("bool", bool):
-        return bool(round(value))
-    return float(value)
-
-
 def apply_assignment(
     p: HadoopParams,
     s: ProfileStats,
@@ -105,29 +100,46 @@ def apply_assignment(
     assignment: Mapping[str, float],
 ) -> tuple[HadoopParams, ProfileStats, CostFactors]:
     """Route a flat {config key: value} assignment onto the three parameter
-    dataclasses with proper int/bool coercion."""
-    out = []
-    for dc in (p, s, c):
-        kw = {
-            k: _coerce_field(dc, k, v)
-            for k, v in assignment.items()
-            if k in dc.__dataclass_fields__
-        }
-        out.append(dc.replace(**kw) if kw else dc)
-    return tuple(out)
+    dataclasses with proper int/bool coercion.
+
+    Thin adapter over :meth:`repro.spec.ParamSpace.apply` — the axis kinds
+    of :func:`repro.spec.hadoop_space` are the single source of coercion.
+    """
+    return hadoop_space().apply(assignment, p, s, c)
+
+
+def sanitize_costs(raw, xp=np):
+    """NaN/±inf -> +inf, so one bad row can never win a min/top-k.
+
+    The ONE implementation of the cost_key sanitization rule, shared by
+    every evaluator's host (numpy) and device (``xp=jnp``) reductions.
+    """
+    return xp.nan_to_num(raw, nan=xp.inf, posinf=xp.inf, neginf=xp.inf)
+
+
+def masked_total(outputs: Mapping[str, Any], cost_key: str, xp=np):
+    """The canonical total-cost column: model cost where ``valid``, else inf.
+
+    Shared by :class:`ChunkedEvaluator`, the cluster planner and the what-if
+    service so the invalid-row convention cannot drift between backends.
+    """
+    return xp.where(outputs["valid"] > 0, outputs[cost_key], xp.inf)
 
 
 @dataclass
 class BlockTopK:
     """Per-block top-k reduction: k cheapest valid rows, k cheapest invalid
     rows (candidates for the exact escape hatch), and the block valid count.
-    Indices are block-local."""
+    Indices are block-local.  ``reason_counts`` says *why* rows were invalid
+    (per closed-form constraint of :data:`repro.spec.VALIDITY_CONSTRAINTS`),
+    for backends whose outputs expose the disaggregated flags."""
 
     costs: np.ndarray
     idx: np.ndarray
     inv_costs: np.ndarray
     inv_idx: np.ndarray
     n_valid: int
+    reason_counts: dict[str, int] = field(default_factory=dict)
 
 
 class Evaluator:
@@ -153,20 +165,35 @@ class Evaluator:
     def exact_cost(self, assignment: Mapping[str, float]) -> float | None:
         return None
 
+    def report(self, overrides: Mapping[str, Any]) -> CostReport | None:
+        """Typed per-phase :class:`repro.spec.CostReport` for these rows, or
+        ``None`` for backends without a phase decomposition."""
+        return None
+
+    @property
+    def param_space(self) -> ParamSpace | None:
+        """Declarative description of this backend's searchable axes
+        (:class:`repro.spec.ParamSpace`), or ``None`` if undeclared."""
+        return None
+
     def chunk_topk(self, overrides: Mapping[str, np.ndarray], k: int) -> "BlockTopK":
         """Top-k of one block: the k cheapest valid configs and the k
         cheapest invalid configs (ranked by raw model cost)."""
         res = self.evaluate(overrides)
         valid = res.outputs["valid"] > 0
-        raw = np.nan_to_num(
-            res.outputs[self.cost_key], nan=np.inf, posinf=np.inf, neginf=np.inf
-        )
+        raw = sanitize_costs(res.outputs[self.cost_key])
         cost = np.where(valid, raw, np.inf)
         inv = np.where(~valid, raw, np.inf)
         kk = min(k, cost.size)
         idx = np.argsort(cost, kind="stable")[:kk]
         inv_idx = np.argsort(inv, kind="stable")[:kk]
-        return BlockTopK(cost[idx], idx, inv[inv_idx], inv_idx, int(valid.sum()))
+        from repro.spec.report import invalid_reason_counts
+
+        # merged cfg gates reduce-side constraints off for map-only rows,
+        # matching ChunkedEvaluator._topk_body's on-device counts
+        cfg = {**getattr(self, "base_cfg", {}), **overrides}
+        return BlockTopK(cost[idx], idx, inv[inv_idx], inv_idx, int(valid.sum()),
+                         invalid_reason_counts(res.outputs, cfg or None))
 
     @property
     def cost_key(self) -> str:
@@ -276,6 +303,8 @@ class ChunkedEvaluator(Evaluator):
         model_fn: Callable[[dict], dict] = job_model_jnp,
     ):
         self._psc = (p, s, c)
+        #: typed view of the base configuration (repro.spec.JobSpec)
+        self.spec = JobSpec(p, s, c)
         #: packed base config (flat key -> jnp scalar); public so callers can
         #: drive evaluate_unchunked against the exact same base
         self.base_cfg = pack_config(p, s, c)
@@ -290,6 +319,17 @@ class ChunkedEvaluator(Evaluator):
         self._topk_fn = jax.jit(
             functools.partial(self._topk_body, body), static_argnames=("k",)
         )
+
+    @classmethod
+    def from_spec(cls, spec: JobSpec, **kw) -> "ChunkedEvaluator":
+        """Construct from a typed :class:`repro.spec.JobSpec` — the typed
+        spelling of ``ChunkedEvaluator(p, s, c)``, bit-for-bit identical."""
+        return cls(spec.params, spec.stats, spec.costs, **kw)
+
+    @property
+    def param_space(self) -> ParamSpace:
+        """The paper's Tables-1-3 axes (:func:`repro.spec.hadoop_space`)."""
+        return hadoop_space()
 
     # ---------------- compiled bodies ----------------
 
@@ -310,16 +350,28 @@ class ChunkedEvaluator(Evaluator):
 
     def _topk_body(self, body, batched, static, mask, *, k):
         out = body(batched, static)
-        raw = jnp.nan_to_num(
-            out[self.cost_key], nan=jnp.inf, posinf=jnp.inf, neginf=jnp.inf
-        )
+        raw = sanitize_costs(out[self.cost_key], xp=jnp)
         live = mask > 0
         valid = (out["valid"] > 0) & live
         cost = jnp.where(valid, raw, jnp.inf)
         inv = jnp.where(~(out["valid"] > 0) & live, raw, jnp.inf)
         neg_c, idx = jax.lax.top_k(-cost, k)
         neg_i, inv_idx = jax.lax.top_k(-inv, k)
-        return -neg_c, idx, -neg_i, inv_idx, jnp.sum(valid)
+        # per-constraint invalidity counts ride the same device reduction,
+        # so the escape-hatch log can say WHICH closed-form domain failed.
+        # Reduce-side flags are zeroed by the model for map-only rows; gate
+        # them on pNumReducers so they do not over-report there.
+        has_red = (batched["pNumReducers"] if "pNumReducers" in batched
+                   else static["pNumReducers"]) > 0
+        reasons = {}
+        for name, (key, reduce_side, _) in VALIDITY_CONSTRAINTS.items():
+            if key not in out:
+                continue
+            failed = (out[key] == 0) & live
+            if reduce_side:
+                failed = failed & has_red
+            reasons[name] = jnp.sum(failed)
+        return -neg_c, idx, -neg_i, inv_idx, jnp.sum(valid), reasons
 
     # ---------------- padding / packing ----------------
 
@@ -349,8 +401,22 @@ class ChunkedEvaluator(Evaluator):
             for k, v in out.items():
                 out_blocks.setdefault(k, []).append(np.asarray(v)[: stop - start])
         outputs = {k: np.concatenate(v) for k, v in out_blocks.items()}
-        total = np.where(outputs["valid"] > 0, outputs[self.cost_key], np.inf)
+        total = masked_total(outputs, self.cost_key)
         return SearchResult(overrides=batched, outputs=outputs, total_cost=total)
+
+    def report(self, overrides: Mapping[str, Any]) -> CostReport:
+        """Typed per-phase report for these rows (the ``repro.api`` path).
+
+        Evaluates through the identical chunked executable and lifts the
+        flat outputs into a :class:`repro.spec.CostReport`; ``total_cost``
+        and ``valid`` are the dict path's arrays by reference, so the typed
+        path is bit-for-bit the dict path.
+        """
+        res = self.evaluate(overrides)
+        cfg = {k: np.asarray(v) for k, v in self.base_cfg.items()}
+        for k, v in overrides.items():
+            cfg[k] = np.asarray(v, dtype=cfg[k].dtype)
+        return CostReport.from_outputs(res.outputs, cfg)
 
     def evaluate_small(self, overrides: Mapping[str, Any]) -> SearchResult:
         """Tiny ad-hoc batches without padding to the full chunk: rows are
@@ -371,7 +437,7 @@ class ChunkedEvaluator(Evaluator):
         }
         out = evaluate_unchunked(static, padded, self._model_fn)
         out = {k: v[:n] for k, v in out.items()}
-        total = np.where(out["valid"] > 0, out[self.cost_key], np.inf)
+        total = masked_total(out, self.cost_key)
         return SearchResult(overrides=batched, outputs=out, total_cost=total)
 
     def chunk_topk(self, overrides: Mapping[str, np.ndarray], k: int) -> BlockTopK:
@@ -382,10 +448,12 @@ class ChunkedEvaluator(Evaluator):
             raise ValueError(f"block of {n} rows exceeds chunk={self.chunk}")
         cols, mask = self._pad(batched, 0, n)
         kk = min(k, self.chunk)
-        costs, idx, inv_c, inv_i, n_valid = self._topk_fn(cols, static, mask, k=kk)
+        costs, idx, inv_c, inv_i, n_valid, reasons = self._topk_fn(
+            cols, static, mask, k=kk)
         return BlockTopK(
             np.asarray(costs), np.asarray(idx),
             np.asarray(inv_c), np.asarray(inv_i), int(n_valid),
+            {name: int(v) for name, v in reasons.items() if int(v)},
         )
 
     def exact_cost(self, assignment: Mapping[str, float]) -> float:

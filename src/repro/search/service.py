@@ -42,6 +42,7 @@ Correctness contract (tested in ``tests/test_service.py``):
 from __future__ import annotations
 
 import itertools
+import logging
 import threading
 import time
 from concurrent.futures import Future
@@ -51,11 +52,15 @@ from typing import Any, Mapping, Sequence
 import numpy as np
 
 from repro.runtime.batching import AdmissionQueue, LatencyStats
+from repro.spec import CostReport, PhaseBreakdown
+from repro.spec.report import invalid_reasons
 
-from .evaluator import Evaluator, InvalidGridError, SearchResult
+from .evaluator import Evaluator, InvalidGridError, SearchResult, masked_total
 from .grid import space_block, space_size
 
-__all__ = ["QueryStats", "QueryResult", "WhatIfService"]
+__all__ = ["QueryStats", "QueryResult", "PhaseQueryResult", "WhatIfService"]
+
+logger = logging.getLogger("repro.search.service")
 
 
 @dataclass
@@ -80,6 +85,43 @@ class QueryResult(SearchResult):
 
     exact: np.ndarray = field(default_factory=lambda: np.zeros(0, dtype=bool))
     stats: QueryStats = field(default_factory=QueryStats)
+
+
+@dataclass
+class PhaseQueryResult:
+    """A resolved *per-phase* what-if query (the typed query type).
+
+    ``objective`` is the chosen phase's job-level cost per row
+    (:class:`repro.spec.PhaseBreakdown` field, seconds); ``feasible`` marks
+    rows that are model-valid AND satisfy the total-cost constraint.
+    ``report`` is the full typed :class:`repro.spec.CostReport`, so callers
+    can inspect every other phase (and the disaggregated validity flags) of
+    the rows they asked about.
+    """
+
+    overrides: dict[str, np.ndarray]
+    report: CostReport
+    phase: str
+    objective: np.ndarray
+    feasible: np.ndarray
+    total_max: float | None = None
+    stats: QueryStats = field(default_factory=QueryStats)
+
+    def best(self) -> tuple[int, float, dict[str, float]]:
+        """Index, phase cost and assignment of the best feasible row."""
+        obj = np.where(self.feasible, np.asarray(self.objective), np.inf)
+        if obj.size == 0 or not np.isfinite(obj).any():
+            constraint = (f" under total_cost <= {self.total_max}"
+                          if self.total_max is not None else "")
+            raise InvalidGridError(
+                f"no feasible configuration for phase {self.phase!r}"
+                f"{constraint}; invalid-constraint reasons: "
+                + ("; ".join(self.report.invalid_reasons()) or "none")
+            )
+        i = int(np.argmin(obj))
+        return i, float(obj[i]), {
+            k: float(v[i]) for k, v in self.overrides.items()
+        }
 
 
 class _Query:
@@ -253,6 +295,57 @@ class WhatIfService:
         ov.update(cols)
         return self.submit(ov, exact_fallback=exact_fallback)
 
+    def phase_query(self, overrides: Mapping[str, Any], *,
+                    phase: str, total_max: float | None = None) -> Future:
+        """Typed per-phase what-if query: minimize one phase's cost, with an
+        optional job-total budget.
+
+        "Which of these configs minimizes ``shuffle`` time subject to
+        ``j_totalCost <= total_max``?"  ``phase`` is a
+        :class:`repro.spec.PhaseBreakdown` field; rows are evaluated through
+        the exact same coalesced chunks as :meth:`submit` (identical
+        numbers), then lifted into a :class:`repro.spec.CostReport` — the
+        future resolves to :class:`PhaseQueryResult`.  Requires a backend
+        with phase reports (the Hadoop job model).
+        """
+        if phase not in PhaseBreakdown.names():
+            raise KeyError(
+                f"unknown phase: {phase!r} (phases: {list(PhaseBreakdown.names())})"
+            )
+        inner = self.submit(overrides)
+        out: Future = Future()
+
+        def _lift(f: Future) -> None:
+            try:
+                out.set_result(self._phase_result(f.result(), phase, total_max))
+            except BaseException as e:
+                out.set_exception(e)
+
+        inner.add_done_callback(_lift)
+        return out
+
+    def _phase_result(self, qr: QueryResult, phase: str,
+                      total_max: float | None) -> PhaseQueryResult:
+        if "m_ioReadCost" not in qr.outputs:
+            raise TypeError(
+                "phase queries need per-phase model outputs (the Hadoop job "
+                f"model); this service's backend emits {sorted(qr.outputs)[:4]}..."
+            )
+        cfg = {**self._base, **qr.overrides}
+        report = CostReport.from_outputs(qr.outputs, cfg)
+        feasible = np.asarray(qr.outputs["valid"]) > 0
+        if total_max is not None:
+            feasible = feasible & (np.asarray(report.total_cost) <= total_max)
+        return PhaseQueryResult(
+            overrides=dict(qr.overrides),
+            report=report,
+            phase=phase,
+            objective=np.asarray(report.phases[phase]),
+            feasible=feasible,
+            total_max=total_max,
+            stats=qr.stats,
+        )
+
     def map(self, queries: Sequence[Mapping[str, Any]], *,
             exact_fallback: bool = False) -> list[QueryResult]:
         """Submit many queries under one admission lock and wait for all —
@@ -369,15 +462,22 @@ class WhatIfService:
     def _resolve(self, q: _Query) -> None:
         outputs = q.outputs
         valid = outputs["valid"] > 0
-        total = np.where(valid, outputs[self.evaluator.cost_key], np.inf)
+        total = masked_total(outputs, self.evaluator.cost_key)
         exact = np.zeros(q.n, dtype=bool)
         if q.exact_fallback and not valid.all():
+            cfg = {**self._base, **q.cols}
             for i in np.flatnonzero(~valid):
                 cost = self.evaluator.exact_cost(
                     {k: float(v[i]) for k, v in q.cols.items()}
                 )
                 if cost is None:
                     break               # backend has no exact path
+                logger.info(
+                    "valid==0 exact fallback: query %d row %d re-costed via "
+                    "the exact simulator (%.6gs); failed constraints: %s",
+                    q.qid, i, cost,
+                    "; ".join(invalid_reasons(outputs, i, cfg)) or "unknown",
+                )
                 total[i] = cost
                 exact[i] = True
             with self._lock:

@@ -17,6 +17,7 @@ Hadoop-first signatures (re-exported by ``repro.core.tuner``).
 
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass, field
 from typing import Mapping, Sequence
@@ -24,6 +25,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
+from repro.spec.report import invalid_reason_counts
 
 from .evaluator import (
     Evaluator,
@@ -44,6 +46,8 @@ __all__ = [
     "random_search",
     "coordinate_descent",
 ]
+
+logger = logging.getLogger("repro.search.strategies")
 
 
 @dataclass
@@ -170,6 +174,19 @@ def coordinate_descent_ev(
             if exact_fallback and not np.isfinite(costs).any():
                 # whole sweep out of the closed-form domain: cost every
                 # candidate via the exact simulator instead of argmin(inf)
+                base = getattr(evaluator, "base_cfg", None)
+                reasons = invalid_reason_counts(
+                    res.outputs,
+                    {**base, **overrides} if base is not None else None,
+                )
+                logger.info(
+                    "valid==0 exact fallback: %s sweep (%d candidates) is "
+                    "entirely out of the closed-form domain; failed "
+                    "constraints: %s",
+                    k, len(cand),
+                    ", ".join(f"{n}={c}" for n, c in reasons.items())
+                    or "not reported by this backend",
+                )
                 exact_costs = [
                     evaluator.exact_cost({**assign, k: float(v)}) for v in cand
                 ]

@@ -13,6 +13,7 @@ so streamed results agree with a full numpy ``argsort`` oracle (tested).
 
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Mapping
 
@@ -21,6 +22,8 @@ import numpy as np
 from .evaluator import BlockTopK, Evaluator, InvalidGridError
 
 __all__ = ["TopKEntry", "TopKResult", "TopKAccumulator"]
+
+logger = logging.getLogger("repro.search.topk")
 
 
 @dataclass
@@ -42,6 +45,9 @@ class TopKResult:
     n_evaluated: int
     n_valid: int
     elapsed_s: float = 0.0
+    #: why rows were invalid, summed over all streamed blocks: constraint
+    #: name (repro.spec.VALIDITY_CONSTRAINTS) -> row count
+    invalid_reason_counts: dict[str, int] = field(default_factory=dict)
 
     def best(self) -> TopKEntry:
         if not self.entries:
@@ -85,6 +91,7 @@ class TopKAccumulator:
         self._invalid = _Cands()
         self.n_evaluated = 0
         self.n_valid = 0
+        self._reasons: dict[str, int] = {}
 
     def update(
         self, start: int, cols: Mapping[str, np.ndarray], block: BlockTopK
@@ -93,6 +100,8 @@ class TopKAccumulator:
         n_rows = len(next(iter(cols.values())))
         self.n_evaluated += n_rows
         self.n_valid += block.n_valid
+        for name, n in block.reason_counts.items():
+            self._reasons[name] = self._reasons.get(name, 0) + n
 
         def pick(costs, idx, pool: _Cands):
             keep = np.isfinite(costs)
@@ -121,6 +130,14 @@ class TopKAccumulator:
         ]
         free = self.k - len(entries)
         if free > 0 and exact_fallback and len(self._invalid.assigns):
+            logger.info(
+                "valid==0 exact fallback: only %d/%d ranked rows are model-"
+                "valid; re-costing up to %d invalid survivor(s) via "
+                "evaluator.exact_cost; failed constraints across the grid: %s",
+                len(entries), self.k, len(self._invalid.assigns),
+                ", ".join(f"{n}={c}" for n, c in self._reasons.items())
+                or "not reported by this backend",
+            )
             survivors = []
             for c, i, a in zip(self._invalid.costs, self._invalid.gidx,
                                self._invalid.assigns):
@@ -137,4 +154,5 @@ class TopKAccumulator:
             n_evaluated=self.n_evaluated,
             n_valid=self.n_valid,
             elapsed_s=elapsed_s,
+            invalid_reason_counts=dict(self._reasons),
         )

@@ -23,14 +23,17 @@ import numpy as np
 
 from repro.core.tpu_model import TpuCostFactors, TpuParams, step_model
 from repro.models.config import ModelConfig
+from repro.spec import Axis, ParamSpace, Predicate
 
-from .evaluator import SearchResult, Evaluator
+from .evaluator import Evaluator, SearchResult, masked_total
 from .strategies import search_topk
 from .topk import TopKResult
 
-__all__ = ["TpuEvaluator", "tune_tpu", "mesh_space"]
+__all__ = ["TpuEvaluator", "tune_tpu", "mesh_space", "TPU_AXIS_NAMES"]
 
-_SWEEPABLE = ("dp", "tp", "n_micro", "remat", "ep")
+#: the sweepable execution-config axes (frozen in repro/spec/manifest.json)
+TPU_AXIS_NAMES = ("dp", "tp", "n_micro", "remat", "ep")
+_SWEEPABLE = TPU_AXIS_NAMES
 
 
 class TpuEvaluator(Evaluator):
@@ -58,16 +61,56 @@ class TpuEvaluator(Evaluator):
         self.base = base or TpuParams()
         self.n_chips = n_chips
         self.objective = objective
+        self._space = self._build_space()
 
     @property
     def cost_key(self) -> str:
         return self.objective
 
+    @property
+    def param_space(self) -> ParamSpace:
+        """Declared mesh axes + shardability predicates — the GSPMD analogue
+        of the paper's merge-domain validity, made inspectable."""
+        return self._space
+
+    def _build_space(self) -> ParamSpace:
+        gb = self.shape.global_batch
+        preds = []
+        if self.n_chips is not None:
+            n = self.n_chips
+            preds.append(Predicate(
+                "chipBudget",
+                lambda c, n=n: c["dp"] * c["tp"] == n,
+                doc=f"dp * tp must equal the chip budget ({n})",
+            ))
+        preds.append(Predicate(
+            "batchDivides",
+            lambda c: gb % np.maximum(c["dp"], 1) == 0,
+            doc=f"dp must divide the global batch ({gb})",
+        ))
+        preds.append(Predicate(
+            "microDivides",
+            lambda c: (c["n_micro"] == 1)
+            | ((gb // np.maximum(c["dp"], 1)) % np.maximum(c["n_micro"], 1) == 0),
+            doc="n_micro must divide the per-replica batch",
+        ))
+        axes = [
+            Axis("dp", kind="int", lower=1, group="mesh", doc="data-parallel ways"),
+            Axis("tp", kind="int", lower=1, group="mesh",
+                 doc="tensor/model-parallel ways"),
+            Axis("n_micro", kind="int", lower=1, group="mesh",
+                 doc="gradient-accumulation microbatches"),
+            Axis("remat", kind="bool", group="mesh",
+                 doc="recompute activations in backward"),
+            Axis("ep", kind="int", lower=1, group="mesh",
+                 doc="expert-parallel ways (<= tp)"),
+        ]
+        return ParamSpace(axes, preds)
+
     def _row_params(self, row: Mapping[str, float]) -> TpuParams:
-        kw: dict[str, Any] = {}
-        for k in _SWEEPABLE:
-            if k in row:
-                kw[k] = bool(round(row[k])) if k == "remat" else int(round(row[k]))
+        kw: dict[str, Any] = {
+            k: self._space.coerce(k, row[k]) for k in _SWEEPABLE if k in row
+        }
         p = TpuParams(**{**_as_kwargs(self.base), **kw})
         if "ep" not in kw:
             ep = p.tp if self.cfg.n_experts and self.cfg.n_experts % p.tp == 0 else 1
@@ -75,19 +118,18 @@ class TpuEvaluator(Evaluator):
         return p
 
     def _row_valid(self, p: TpuParams) -> bool:
-        if self.n_chips is not None and p.chips != self.n_chips:
-            return False
-        if self.shape.global_batch % p.dp:
-            return False
-        if p.n_micro != 1 and (self.shape.global_batch // p.dp) % p.n_micro:
-            return False
-        return True
+        ok, _ = self._space.validity_mask({
+            "dp": np.asarray(p.dp), "tp": np.asarray(p.tp),
+            "n_micro": np.asarray(p.n_micro), "remat": np.asarray(p.remat),
+            "ep": np.asarray(p.ep),
+        })
+        return bool(ok)
 
     def evaluate(self, overrides: Mapping[str, Any]) -> SearchResult:
         cols = {k: np.atleast_1d(np.asarray(v, dtype=np.float64))
                 for k, v in overrides.items()}
         for k in cols:
-            if k not in _SWEEPABLE:
+            if k not in self._space:
                 raise KeyError(f"unknown TPU config key: {k!r}")
         lengths = {v.shape[0] for v in cols.values()}
         if len(lengths) != 1:
@@ -107,7 +149,7 @@ class TpuEvaluator(Evaluator):
             out["total_s"][i] = m.total_s
             out["overlap_s"][i] = m.overlap_s
             out["valid"][i] = 1.0
-        total = np.where(out["valid"] > 0, out[self.objective], np.inf)
+        total = masked_total(out, self.objective)
         return SearchResult(overrides=cols, outputs=out, total_cost=total)
 
 

@@ -1,0 +1,52 @@
+"""repro.spec — typed, declarative descriptions of configs and costs.
+
+The paper's value is its *structure*: three parameter tables (Tables 1-3)
+and per-phase cost equations composed into job totals (Eqs. 2-98).  This
+package is that structure as a first-class, typed API layer — the single
+source every evaluator, strategy and service plumbs through instead of
+re-inventing stringly-typed dict conventions:
+
+* :mod:`~repro.spec.axes` — :class:`Axis` / :class:`Predicate` /
+  :class:`ParamSpace`: declarative searchable axes (name, bounds, int vs
+  float vs bool, unit, paper table) driving grid validation, override
+  coercion and inspectable validity masks.  :func:`hadoop_space` is the
+  paper's full Tables-1-3 space.
+* :mod:`~repro.spec.job` — :class:`JobSpec`: the three parameter
+  dataclasses as one frozen, hashable, pytree-registered value, losslessly
+  convertible to/from the flat ``pack_config`` dict.
+* :mod:`~repro.spec.report` — :class:`PhaseBreakdown` / :class:`CostReport`:
+  the model's ``m_*``/``r_*``/``j_*`` dict outputs lifted into typed,
+  vmap-able pytrees with paper equation numbers in field metadata and
+  disaggregated validity (which §2.3 merge constraint failed, not just
+  that one did).
+
+The public surface of this package (and of :mod:`repro.api`) is frozen in
+``manifest.json`` and guarded by ``tests/test_api_surface.py``; the
+dict-key paths remain supported as thin adapters, bit-for-bit equal to the
+typed path (asserted in CI over every ``mapreduce.JOBS`` profile).
+"""
+
+from .axes import Axis, ParamSpace, Predicate, hadoop_space
+from .job import JobSpec
+from .report import (
+    PHASES,
+    VALIDITY_CONSTRAINTS,
+    CostReport,
+    PhaseBreakdown,
+    invalid_reason_counts,
+    invalid_reasons,
+)
+
+__all__ = [
+    "Axis",
+    "Predicate",
+    "ParamSpace",
+    "hadoop_space",
+    "JobSpec",
+    "PhaseBreakdown",
+    "CostReport",
+    "PHASES",
+    "VALIDITY_CONSTRAINTS",
+    "invalid_reason_counts",
+    "invalid_reasons",
+]

@@ -1,0 +1,134 @@
+"""Typed job specification: the paper's three parameter tables as one value.
+
+:class:`JobSpec` bundles the Table-1/2/3 dataclasses
+(:class:`~repro.core.hadoop.params.HadoopParams`,
+:class:`~repro.core.hadoop.params.ProfileStats`,
+:class:`~repro.core.hadoop.params.CostFactors`) into a single frozen,
+hashable, pytree-registered value — the unit every layer above passes
+around instead of three positional dataclasses or a stringly-typed flat
+dict.  Conversions are lossless both ways:
+
+* :meth:`JobSpec.pack` -> the flat ``{key: jnp scalar}`` config the batched
+  model (:func:`repro.core.hadoop.model.job_model_jnp`) consumes — exactly
+  ``pack_config(params, stats, costs)``, so the typed path is bit-for-bit
+  the dict path.
+* :meth:`JobSpec.from_flat` <- a flat float mapping, with int/bool fields
+  recovered through the :func:`repro.spec.axes.hadoop_space` axis kinds
+  (round-tripping is property-tested in ``tests/test_spec.py``).
+
+Pytree registration makes a ``JobSpec`` transparent to ``jax.tree_util``:
+leaves are the 42 scalar field values in ``CONFIG_KEYS`` order, so specs
+can be tree-mapped, stacked, or donated through jit boundaries without
+bespoke plumbing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hadoop.model import CONFIG_KEYS, pack_config
+from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
+
+from .axes import ParamSpace, hadoop_space
+
+__all__ = ["JobSpec"]
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """One fully-specified job: Hadoop knobs + data/UDF profile + cost factors.
+
+    Frozen and hashable (all three members are frozen dataclasses of
+    scalars), so a ``JobSpec`` can key caches — e.g. the facade's evaluator
+    cache — the same way the ``(p, s, c)`` triple always did.
+    """
+
+    params: HadoopParams = HadoopParams()
+    stats: ProfileStats = ProfileStats()
+    costs: CostFactors = CostFactors()
+    name: str = ""
+
+    # ---------------- conversions ----------------
+
+    def pack(self) -> dict[str, jnp.ndarray]:
+        """The flat float config the batched model consumes (``pack_config``)."""
+        return pack_config(self.params, self.stats, self.costs)
+
+    @classmethod
+    def from_flat(cls, cfg: Mapping[str, float], *, name: str = "") -> "JobSpec":
+        """Inverse of :meth:`pack`: typed spec from a flat float mapping.
+
+        Missing keys keep their dataclass defaults; int/bool fields are
+        recovered via the axis kinds, so
+        ``JobSpec.from_flat(spec.pack()) == spec`` exactly (in the repo's
+        float64 mode — float32 packing quantizes float fields).
+        """
+        space = hadoop_space()
+        objs = []
+        for dc_cls in (HadoopParams, ProfileStats, CostFactors):
+            kw = {
+                k: space.coerce(k, float(cfg[k]))
+                for k in dc_cls.__dataclass_fields__
+                if k in cfg
+            }
+            objs.append(dc_cls(**kw))
+        return cls(*objs, name=name)
+
+    def replace(self, **assignment) -> "JobSpec":
+        """New spec with flat-key overrides routed onto the right table.
+
+        Accepts the same keys as the search layer's override dicts
+        (``pSortMB=200.0, pUseCombine=1.0, ...``) with axis coercion, plus
+        ``name=``.
+        """
+        name = assignment.pop("name", self.name)
+        p, s, c = hadoop_space().apply(
+            assignment, self.params, self.stats, self.costs)
+        unknown = [
+            k for k in assignment
+            if not any(k in o.__dataclass_fields__ for o in (p, s, c))
+        ]
+        if unknown:
+            raise KeyError(f"unknown config key(s): {unknown}")
+        return JobSpec(p, s, c, name=name)
+
+    # ---------------- introspection ----------------
+
+    @property
+    def param_space(self) -> ParamSpace:
+        return hadoop_space()
+
+    def __getitem__(self, key: str) -> float:
+        for obj in (self.params, self.stats, self.costs):
+            if key in obj.__dataclass_fields__:
+                return getattr(obj, key)
+        raise KeyError(f"unknown config key: {key!r}")
+
+
+def _flatten_jobspec(spec: JobSpec):
+    leaves = tuple(
+        getattr(obj, f.name)
+        for obj in (spec.params, spec.stats, spec.costs)
+        for f in fields(obj)
+    )
+    return leaves, spec.name
+
+
+def _unflatten_jobspec(name: str, leaves):
+    it = iter(leaves)
+    objs = []
+    for dc_cls in (HadoopParams, ProfileStats, CostFactors):
+        names = [f.name for f in fields(dc_cls)]
+        objs.append(dc_cls(**{n: next(it) for n in names}))
+    return JobSpec(*objs, name=name)
+
+
+jax.tree_util.register_pytree_node(JobSpec, _flatten_jobspec, _unflatten_jobspec)
+
+assert len(CONFIG_KEYS) == sum(
+    len(fields(c)) for c in (HadoopParams, ProfileStats, CostFactors)
+)

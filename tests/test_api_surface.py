@@ -1,0 +1,66 @@
+"""Public-API surface snapshot: exported symbols + ParamSpace axis names.
+
+``src/repro/spec/manifest.json`` is the checked-in contract of the typed
+layer.  Any drift — a symbol added to or dropped from ``repro.spec`` /
+``repro.api`` ``__all__``, an axis renamed, added or removed from the
+Hadoop / cluster / TPU parameter spaces — fails here, so surface changes
+are always deliberate: update the manifest in the same commit and say why.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+MANIFEST = Path(__file__).resolve().parents[1] / "src/repro/spec/manifest.json"
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads(MANIFEST.read_text())
+
+
+def test_spec_exports_frozen(manifest):
+    import repro.spec as spec
+
+    assert sorted(spec.__all__) == manifest["repro.spec"], (
+        "repro.spec.__all__ drifted from manifest.json — update the "
+        "manifest deliberately if this is intentional"
+    )
+    for name in spec.__all__:
+        assert getattr(spec, name, None) is not None, name
+
+
+def test_api_exports_frozen(manifest):
+    import repro.api as api
+
+    assert sorted(api.__all__) == manifest["repro.api"]
+    for name in api.__all__:
+        assert getattr(api, name, None) is not None, name
+
+
+def test_hadoop_axis_names_frozen(manifest):
+    from repro.core.hadoop.model import CONFIG_KEYS
+    from repro.spec import hadoop_space
+
+    assert list(hadoop_space().names) == manifest["axes"]["hadoop"]
+    # the flat pack_config key order IS the axis order — one enumeration
+    assert manifest["axes"]["hadoop"] == CONFIG_KEYS
+
+
+def test_cluster_axis_names_frozen(manifest):
+    from repro.cluster.evaluator import cluster_space
+
+    assert list(cluster_space().names) == manifest["axes"]["cluster"]
+
+
+def test_tpu_axis_names_frozen(manifest):
+    from repro.search.tpu import TPU_AXIS_NAMES
+
+    assert list(TPU_AXIS_NAMES) == manifest["axes"]["tpu"]
+
+
+def test_registered_backends_cover_the_manifest_spaces(manifest):
+    import repro.api as api
+
+    assert set(manifest["axes"]) <= set(api.available_models())

@@ -1,0 +1,405 @@
+"""repro.spec + repro.api: the typed layer IS the dict layer, bit for bit.
+
+The contract this file guards (and CI runs explicitly):
+
+* ``JobSpec`` <-> ``pack_config`` round-trips losslessly, with int/bool
+  fields recovered through the ``hadoop_space()`` axis kinds;
+* the typed path (``ChunkedEvaluator.from_spec`` + ``CostReport``) is
+  bit-for-bit equal to the dict path over every ``mapreduce.JOBS``
+  profile;
+* ``PhaseBreakdown`` fields sum to ``j_totalCost`` (Eqs. 96-98) — the
+  phase decomposition loses nothing;
+* specs and reports are registered pytrees (vmap-able, tree-mappable);
+* validity is disaggregated: reports and fallback log lines say WHICH
+  §2.3 merge constraint failed;
+* a per-phase what-if query (minimize shuffle subject to a total budget)
+  runs end-to-end through the async service via the ``repro.api`` facade.
+"""
+
+import logging
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.cluster.evaluator import ClusterEvaluator, cluster_space
+from repro.cluster.workload import default_job_classes
+from repro.core.hadoop import CostFactors, HadoopParams, MiB, ProfileStats
+from repro.core.hadoop.model import CONFIG_KEYS, job_model_jnp, pack_config
+from repro.search import (
+    ChunkedEvaluator,
+    InvalidGridError,
+    masked_total,
+    sanitize_costs,
+    search_topk,
+)
+from repro.spec import CostReport, JobSpec, PhaseBreakdown, hadoop_space
+
+P = HadoopParams(pNumNodes=8, pNumMappers=64, pNumReducers=16, pSplitSize=128 * MiB)
+S = ProfileStats(sMapSizeSel=0.8, sReduceSizeSel=0.5)
+C = CostFactors()
+
+# every mapreduce.JOBS profile as a (name, params, stats, costs) tuple
+PROFILES = [(jc.name, jc.params, jc.stats, jc.costs)
+            for jc in default_job_classes()]
+
+SWEEP = {
+    "pSortMB": np.array([0.25, 25.0, 50.0, 100.0, 400.0]),
+    "pSortFactor": np.array([3.0, 5.0, 10.0, 25.0, 50.0]),
+    "pNumReducers": np.array([0.0, 4.0, 8.0, 16.0, 64.0]),
+}
+
+# numSpills >> pSortFactor**2 everywhere -> closed-form merge math invalid
+INVALID = {"pSortMB": np.array([0.25, 0.5]), "pSortFactor": np.array([2.0, 2.0])}
+
+
+# ------------------------------------------------------------------
+# JobSpec <-> pack_config round trip
+# ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,p,s,c", PROFILES)
+def test_jobspec_pack_is_pack_config(name, p, s, c):
+    spec = JobSpec(p, s, c, name=name)
+    flat, ref = spec.pack(), pack_config(p, s, c)
+    assert list(flat) == CONFIG_KEYS == list(ref)
+    for k in ref:
+        assert np.array_equal(np.asarray(flat[k]), np.asarray(ref[k])), k
+
+
+@pytest.mark.parametrize("name,p,s,c", PROFILES)
+def test_jobspec_round_trip(name, p, s, c):
+    spec = JobSpec(p, s, c)
+    back = JobSpec.from_flat({k: float(v) for k, v in spec.pack().items()})
+    assert back == spec
+    # int/bool fields come back as their typed selves, not floats
+    assert isinstance(back.params.pSortFactor, int)
+    assert isinstance(back.params.pUseCombine, bool)
+
+
+def test_jobspec_replace_routes_and_coerces():
+    spec = JobSpec(P, S, C).replace(
+        pSortMB=200.0, pSortFactor=25.4, pUseCombine=1.0, sMapSizeSel=0.5)
+    assert spec.params.pSortMB == 200.0
+    assert spec.params.pSortFactor == 25 and isinstance(
+        spec.params.pSortFactor, int)
+    assert spec.params.pUseCombine is True
+    assert spec.stats.sMapSizeSel == 0.5
+    assert spec["pSortFactor"] == 25
+    with pytest.raises(KeyError, match="unknown config key"):
+        spec.replace(notAKey=1.0)
+
+
+def test_jobspec_is_pytree_and_hashable():
+    import jax
+
+    spec = JobSpec(P, S, C, name="wc")
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    assert len(leaves) == len(CONFIG_KEYS)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back == spec and back.name == "wc"
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, spec)
+    assert doubled.params.pNumMappers == 2 * P.pNumMappers
+    assert hash(spec) == hash(JobSpec(P, S, C, name="wc"))
+
+
+# ------------------------------------------------------------------
+# typed path == dict path, bit for bit, over all JOBS profiles
+# ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,p,s,c", PROFILES)
+def test_typed_evaluator_bit_for_bit(name, p, s, c):
+    spec = JobSpec(p, s, c, name=name)
+    ev_typed = ChunkedEvaluator.from_spec(spec, chunk=16)
+    ev_dict = ChunkedEvaluator(p, s, c, chunk=16)
+    rt, rd = ev_typed.evaluate(SWEEP), ev_dict.evaluate(SWEEP)
+    assert set(rt.outputs) == set(rd.outputs)
+    for k in rd.outputs:
+        assert np.array_equal(rt.outputs[k], rd.outputs[k]), k
+    assert np.array_equal(rt.total_cost, rd.total_cost)
+    # the typed report's aggregates are the dict arrays, not a recomputation
+    rep = ev_typed.report(SWEEP)
+    assert np.array_equal(np.asarray(rep.total_cost), rd.outputs["j_totalCost"])
+    assert np.array_equal(np.asarray(rep.io_cost), rd.outputs["j_ioJobCost"])
+    assert np.array_equal(np.asarray(rep.cpu_cost), rd.outputs["j_cpuJobCost"])
+    assert np.array_equal(np.asarray(rep.valid), rd.outputs["valid"])
+
+
+@pytest.mark.parametrize("name,p,s,c", PROFILES)
+def test_phase_breakdown_sums_to_total(name, p, s, c):
+    """PhaseBreakdown fields sum to j_totalCost (Eqs. 96-98)."""
+    rep = ChunkedEvaluator.from_spec(JobSpec(p, s, c), chunk=16).report(SWEEP)
+    np.testing.assert_allclose(
+        np.asarray(rep.phases.total()), np.asarray(rep.total_cost), rtol=1e-12)
+
+
+def test_phase_breakdown_sums_property():
+    """Same invariant under randomized configurations (hypothesis)."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    spec0 = JobSpec(P, S, C)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        sort_mb=st.floats(0.25, 512.0),
+        factor=st.integers(2, 100),
+        reducers=st.integers(0, 128),
+        mappers=st.integers(1, 256),
+        combine=st.booleans(),
+        compress=st.booleans(),
+    )
+    def check(sort_mb, factor, reducers, mappers, combine, compress):
+        cfg = spec0.replace(
+            pSortMB=sort_mb, pSortFactor=factor, pNumReducers=reducers,
+            pNumMappers=mappers, pUseCombine=combine,
+            pIsIntermCompressed=compress,
+        ).pack()
+        out = {k: np.asarray(v) for k, v in job_model_jnp(cfg).items()}
+        rep = CostReport.from_outputs(out, cfg)
+        np.testing.assert_allclose(
+            float(rep.phases.total()), float(out["j_totalCost"]), rtol=1e-12)
+
+    check()
+
+
+def test_costreport_is_a_vmappable_pytree():
+    import jax
+    import jax.numpy as jnp
+
+    base = JobSpec(P, S, C).pack()
+
+    def rep_fn(sort_mb):
+        cfg = dict(base)
+        cfg["pSortMB"] = sort_mb
+        return CostReport.from_outputs(job_model_jnp(cfg), cfg)
+
+    vals = jnp.asarray([25.0, 50.0, 100.0])
+    batched = jax.vmap(rep_fn)(vals)
+    assert isinstance(batched, CostReport)
+    assert batched.total_cost.shape == (3,)
+    for i, v in enumerate(vals):
+        single = rep_fn(v)
+        np.testing.assert_array_equal(
+            np.asarray(batched.phases.shuffle)[i], np.asarray(single.phases.shuffle))
+    # equation metadata is attached to the fields
+    assert PhaseBreakdown.eq("shuffle") == "Eqs. 35-61"
+    assert "Eq" in PhaseBreakdown.describe("map_merge")
+
+
+# ------------------------------------------------------------------
+# disaggregated validity
+# ------------------------------------------------------------------
+
+
+def test_report_says_which_constraint_failed():
+    ev = ChunkedEvaluator(P, S, C, chunk=8)
+    rep = ev.report(INVALID)
+    assert np.all(np.asarray(rep.valid) == 0)
+    assert np.all(np.asarray(rep.merge_valid) == 0)
+    reasons = rep.invalid_reasons(0)
+    assert any("mapMerge" in r for r in reasons)
+    with pytest.raises(InvalidGridError, match="mapMerge"):
+        rep.best()
+
+
+def test_maponly_rows_do_not_fail_reduce_constraints():
+    ev = ChunkedEvaluator(P, S, C, chunk=8)
+    rep = ev.report({"pNumReducers": np.array([0.0, 0.0]),
+                     "pSortMB": np.array([50.0, 100.0])})
+    # the model zeroes r_* flags for map-only jobs; the report must not
+    # read that as a failed reduce-side constraint
+    assert np.all(np.asarray(rep.shuffle_valid) == 1)
+    assert np.all(np.asarray(rep.sort_valid) == 1)
+    assert rep.invalid_reasons() == []
+
+
+def test_topk_accumulates_reason_counts():
+    ev = ChunkedEvaluator(P, S, C, chunk=8)
+    res = search_topk(ev, {k: list(v) for k, v in INVALID.items()},
+                      k=1, exact_fallback=True)
+    assert res.invalid_reason_counts.get("mapMerge", 0) > 0
+
+
+def test_base_chunk_topk_reason_counts_match_device_path():
+    """The numpy (base Evaluator) and on-device (ChunkedEvaluator) reason
+    counts agree — including the reduce-side gating for map-only rows,
+    whose r_* flags the model zeroes."""
+    from repro.search.evaluator import Evaluator, SearchResult, evaluate_unchunked
+
+    class Plain(Evaluator):
+        def __init__(self, p, s, c):
+            self.base_cfg = ChunkedEvaluator(p, s, c).base_cfg
+
+        def evaluate(self, overrides):
+            out = evaluate_unchunked(self.base_cfg, overrides)
+            return SearchResult(
+                overrides={k: np.asarray(v) for k, v in overrides.items()},
+                outputs=out, total_cost=masked_total(out, "j_totalCost"))
+
+    # map-only rows that are ALSO merge-invalid: only mapMerge may be counted
+    rows = {"pSortMB": np.array([0.25, 0.25, 100.0]),
+            "pSortFactor": np.array([2.0, 2.0, 10.0]),
+            "pNumReducers": np.array([0.0, 0.0, 0.0])}
+    plain = Plain(P, S, C).chunk_topk(rows, k=3)
+    dev = ChunkedEvaluator(P, S, C, chunk=4).chunk_topk(rows, k=3)
+    assert plain.reason_counts == dev.reason_counts == {"mapMerge": 2}
+
+
+def test_exact_fallback_log_names_the_constraint(caplog):
+    ev = ChunkedEvaluator(P, S, C, chunk=8)
+    from repro.search import WhatIfService
+
+    with caplog.at_level(logging.INFO, logger="repro.search.service"):
+        with WhatIfService(ev) as svc:
+            r = svc.probe({"pSortMB": 0.25, "pSortFactor": 2.0},
+                          exact_fallback=True).result()
+    assert r.exact.all() and np.isfinite(r.total_cost).all()
+    msgs = [rec.getMessage() for rec in caplog.records
+            if "exact fallback" in rec.getMessage()]
+    assert msgs and any("mapMerge" in m for m in msgs)
+
+
+# ------------------------------------------------------------------
+# hoisted sanitization helpers
+# ------------------------------------------------------------------
+
+
+def test_sanitize_and_masked_total_helpers():
+    raw = np.array([1.0, np.nan, np.inf, -np.inf])
+    assert np.array_equal(sanitize_costs(raw), [1.0, np.inf, np.inf, np.inf])
+    out = {"valid": np.array([1.0, 0.0]), "cost": np.array([3.0, 4.0])}
+    assert np.array_equal(masked_total(out, "cost"), [3.0, np.inf])
+
+
+# ------------------------------------------------------------------
+# declared param spaces
+# ------------------------------------------------------------------
+
+
+def test_hadoop_space_matches_config_keys_and_coerces():
+    space = hadoop_space()
+    assert list(space.names) == CONFIG_KEYS
+    assert space["pSortFactor"].kind == "int"
+    assert space["pUseCombine"].kind == "bool"
+    assert space["pSortMB"].unit == "MB"
+    assert space["cMapCPUCost"].table == "Table 3"
+    assert space.coerce("pSortFactor", 9.6) == 10
+    assert space.coerce("pUseCombine", 0.9) is True
+    with pytest.raises(ValueError, match="outside domain"):
+        space.grid({"pSortFactor": [1.0]})      # below the merge minimum
+    with pytest.raises(KeyError, match="unknown config key"):
+        space.grid({"pNope": [1.0]})
+    g = space.grid({"pSortMB": [25, 50]})
+    assert g["pSortMB"].dtype == np.float64
+
+
+def test_cluster_mask_is_the_declared_axis_rule():
+    ev = ClusterEvaluator(default_job_classes(names=["filter"]),
+                          n_jobs=4, n_seeds=1, chunk=8)
+    ov = {
+        "pNumNodes": np.array([0.0, 1.0, 4.0, 2.0]),
+        "pMaxMapsPerNode": np.array([2.0, 0.0, 2.0, 2.0]),
+        "arrivalRate": np.array([0.1, 0.1, 0.0, 0.1]),
+    }
+    res = ev.evaluate(ov)
+    manual = ((np.round(ov["pNumNodes"]) >= 1)
+              & (np.round(ov["pMaxMapsPerNode"]) >= 1)
+              & (ov["arrivalRate"] > 0))
+    # knob-invalid rows are exactly the declared-axis violations (a valid
+    # knob row can still be invalid if the rollout did not converge)
+    assert not res.outputs["valid"][~manual].any()
+    assert list(cluster_space().names) == list(ev.base_cfg)
+    mask, reasons = cluster_space().validity_mask(ov)
+    assert np.array_equal(mask, manual)
+    assert not reasons["pNumNodes bounds"][0]
+    assert not reasons["arrivalRate bounds"][2]
+
+
+def test_tpu_space_predicates_name_the_failure():
+    pytest.importorskip("repro.configs")
+    from repro.configs import SHAPES, get_config
+    from repro.search.tpu import TpuEvaluator
+
+    ev = TpuEvaluator(get_config("gemma2-9b"), SHAPES["train_4k"], n_chips=256)
+    mask, reasons = ev.param_space.validity_mask(
+        {"dp": np.array([16.0, 3.0]), "tp": np.array([16.0, 4.0]),
+         "n_micro": np.array([2.0, 1.0])})
+    assert mask[0] and not mask[1]
+    assert not reasons["chipBudget"][1]
+
+
+# ------------------------------------------------------------------
+# the repro.api facade
+# ------------------------------------------------------------------
+
+
+def test_api_model_and_sweep_match_dict_path():
+    spec = JobSpec(P, S, C)
+    rep = api.sweep(spec, SWEEP)
+    ref = ChunkedEvaluator(P, S, C).evaluate(SWEEP)
+    assert np.array_equal(np.asarray(rep.total_cost), ref.outputs["j_totalCost"])
+    one = api.model(spec, {"pSortMB": 100.0, "pSortFactor": 10.0})
+    assert isinstance(one, CostReport)
+    assert np.asarray(one.total_cost).shape == (1,)
+    assert "hadoop" in api.available_models()
+    assert {"tpu", "cluster"} <= set(api.available_models())
+
+
+def test_api_tune_validates_space_against_axes():
+    spec = JobSpec(P, S, C)
+    res = api.tune(spec, {"pSortMB": [25.0, 50.0, 100.0]}, strategy="descent")
+    assert np.isfinite(res.best_cost)
+    with pytest.raises(KeyError, match="unknown config key"):
+        api.tune(spec, {"pBogus": [1.0]})
+    with pytest.raises(ValueError, match="outside domain"):
+        api.tune(spec, {"pSortFactor": [0.0, 10.0]})
+    with pytest.raises(ValueError, match="boolean"):
+        api.tune(spec, {"pUseCombine": [0.0, 2.0]})
+
+
+def test_api_get_evaluator_passthrough_and_errors():
+    ev = ChunkedEvaluator(P, S, C, chunk=8)
+    assert api.get_evaluator(ev) is ev
+    with pytest.raises(TypeError, match="already-built"):
+        api.get_evaluator(ev, chunk=16)
+    with pytest.raises(KeyError, match="unknown cost model"):
+        api.get_evaluator("nope")
+    cl = api.get_evaluator(
+        "cluster", classes=default_job_classes(names=["filter"]),
+        n_jobs=4, n_seeds=1, chunk=8)
+    assert cl.cost_key == "w_p95Lat"
+
+
+def test_phase_query_end_to_end_through_the_facade():
+    """Minimize shuffle time subject to a total-cost budget, via the async
+    service — the acceptance-criteria query."""
+    spec = JobSpec(P, S, C)
+    rows = {
+        "pSortMB": np.array([25.0, 50.0, 100.0, 200.0, 400.0]),
+        "pNumReducers": np.array([4.0, 8.0, 16.0, 32.0, 64.0]),
+    }
+    oracle = api.sweep(spec, rows)
+    total = np.asarray(oracle.total_cost)
+    budget = float(np.percentile(total, 60))
+    feas = (np.asarray(oracle.valid) > 0) & (total <= budget)
+    assert feas.any() and not feas.all()
+    shuffle = np.where(feas, np.asarray(oracle.phases.shuffle), np.inf)
+    want_i = int(np.argmin(shuffle))
+
+    with api.serve(spec) as svc:
+        pr = svc.phase_query(rows, phase="shuffle", total_max=budget).result()
+    i, cost, assignment = pr.best()
+    assert i == want_i
+    assert cost == float(shuffle[want_i])           # bit-for-bit, not approx
+    assert assignment["pSortMB"] == rows["pSortMB"][want_i]
+    np.testing.assert_array_equal(pr.objective, np.asarray(oracle.phases.shuffle))
+    # unknown phases and constraint-infeasible queries fail intelligibly
+    with pytest.raises(KeyError, match="unknown phase"):
+        svc.phase_query(rows, phase="nope")
+    with api.serve(spec) as svc:
+        pr2 = svc.phase_query(rows, phase="shuffle", total_max=0.0).result()
+        with pytest.raises(InvalidGridError, match="no feasible"):
+            pr2.best()
