@@ -1,21 +1,26 @@
 """E13 — vectorized capacity planner vs per-scenario multi-job DES.
 
-The capacity-planning question — "which cluster shape keeps p95 job latency
-down under this workload?" — needs thousands of (workload-seed x
-cluster-config) scenarios.  The baseline answers each with one Python DES
-run (:func:`repro.cluster.sched.simulate_workload`); the vectorized wave
-simulator (:mod:`repro.cluster.vector_sim`) rolls a whole batch out in one
-compiled ``vmap``'d ``while_loop``.
+The capacity-planning question — "which fleet mix under which scheduler
+keeps p95 job latency down under this workload?" — needs thousands of
+(workload-seed x cluster-config) scenarios.  The baseline answers each with
+one Python DES run (:func:`repro.cluster.sched.simulate_workload`); the
+vectorized wave simulator (:mod:`repro.cluster.vector_sim`) rolls a whole
+batch out in one compiled ``vmap``'d ``while_loop``.
 
-Three claims, asserted rather than eyeballed:
+Claims, asserted rather than eyeballed:
 
-1. **Agreement** — on contention-free FIFO scenarios the wave rollout
-   reproduces per-job DES finish times within rtol 1e-3 (float32 vs the
-   Python floats; the wave structure itself is exact).
+1. **Agreement** — on contention-free FIFO scenarios (homogeneous AND
+   heterogeneous fleets) the wave rollout reproduces per-job DES finish
+   times within rtol 1e-3 (float32 vs the Python floats; the wave structure
+   itself is exact), and on the canonical big-job/small-job preemption
+   scenario the kill-and-requeue reallocation matches the DES for both
+   ``fair_preempt`` and ``capacity`` at the same rtol.
 2. **Convergence accounting** — every scenario either converges or is
    flagged (``converged == 0``); nothing silently truncates.
 3. **Throughput** — >= 50x scenarios/s over the per-scenario DES on a
    planner-shaped batch (full mode; smoke asserts 1+2 and reports numbers).
+   The policy/fleet-mix batch (all four schedulers + heterogeneous rows) is
+   reported alongside the classic gate batch.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_cluster [--smoke] [--quick]
 """
@@ -26,6 +31,11 @@ import numpy as np
 
 from repro.cluster import (
     ClusterConfig,
+    JobArrival,
+    JobClass,
+    NodeClass,
+    POLICIES,
+    WorkloadTrace,
     default_job_classes,
     estimate_steps,
     pack_trace,
@@ -34,6 +44,7 @@ from repro.cluster import (
     simulate_batch,
     simulate_workload,
 )
+from repro.core.hadoop.params import CostFactors, HadoopParams, MiB, ProfileStats
 from repro.core.hadoop.simulator import SimConfig
 
 from .common import table, timer, write_md
@@ -41,23 +52,60 @@ from .common import table, timer, write_md
 CLEAN = SimConfig(speculative_execution=False)
 
 
-def scenario_batch(cols, nodes, mpn, rpn, fair, slowstart, rate):
-    """(B,)-arrays of cluster knobs + one packed trace -> a scenario dict."""
+def scenario_batch(cols, nodes, mpn, rpn, policy, slowstart, rate, *,
+                   fast=None, speedup=None, queue_frac=None):
+    """(B,)-arrays of cluster knobs + one packed trace -> a scenario dict.
+    ``fast``/``speedup`` describe a two-class fleet (fast nodes + baseline
+    remainder); omitted means homogeneous."""
     b = len(nodes)
     tile = lambda a: np.tile(a, (b, 1))
     frac = (nodes - 1.0) / nodes
-    return {
+    scen = {
         "arrival": tile(cols["arrival"]) / rate[:, None],
         "n_maps": tile(cols["n_maps"]),
         "n_reds": tile(cols["n_reds"]),
         "map_cost": tile(cols["map_cost"]),
         "red_work": tile(cols["red_work"]),
         "shuffle": tile(cols["shuffle"]) * frac[:, None],
-        "map_slots": nodes * mpn,
-        "red_slots": nodes * rpn,
-        "fair": fair,
+        "queue": tile(cols["queue"]),
+        "policy": policy,
         "slowstart": slowstart,
     }
+    if fast is None:
+        # homogeneous: 1-D slot columns keep the lean one-class kernel
+        scen["map_slots"] = nodes * mpn
+        scen["red_slots"] = nodes * rpn
+    else:
+        speedup = np.ones(b) if speedup is None else speedup
+        base_n = nodes - fast
+        scen["map_slots"] = np.stack([fast * mpn, base_n * mpn], axis=1)
+        scen["red_slots"] = np.stack([fast * rpn, base_n * rpn], axis=1)
+        scen["speedup"] = np.stack([speedup, np.ones(b)], axis=1)
+    if queue_frac is not None:
+        scen["queue_frac"] = np.tile(np.asarray(queue_frac), (b, 1))
+    return scen
+
+
+def _fleet_config(nodes, mpn, rpn, policy, slowstart, *, fast=0, speedup=1.0):
+    fleet = ()
+    if fast > 0 and speedup > 1.0:
+        fleet = (NodeClass(int(fast), float(speedup)),) + (
+            (NodeClass(int(nodes - fast), 1.0),) if nodes > fast else ())
+    return ClusterConfig(
+        num_nodes=int(nodes), map_slots_per_node=int(mpn),
+        reduce_slots_per_node=int(rpn), scheduler=POLICIES[int(policy)],
+        reduce_slowstart=float(slowstart), node_classes=fleet,
+        preempt_timeout=0.0)
+
+
+def _big_small_trace():
+    big = JobClass("batch", HadoopParams(pNumMappers=64, pNumReducers=8,
+                                         pSplitSize=64 * MiB),
+                   ProfileStats(), CostFactors())
+    small = JobClass("adhoc", HadoopParams(pNumMappers=4, pNumReducers=1,
+                                           pSplitSize=64 * MiB),
+                     ProfileStats(), CostFactors())
+    return WorkloadTrace((JobArrival(0, big, 0.0), JobArrival(1, small, 30.0)))
 
 
 def run(quick: bool = False, smoke: bool = False) -> list[str]:
@@ -71,25 +119,70 @@ def run(quick: bool = False, smoke: bool = False) -> list[str]:
     trace = poisson_trace(classes, n_jobs, rate=1.0, seed=3)
     cols = pack_trace(trace)
 
-    # ---- agreement: contention-free FIFO scenarios vs the DES ----
+    # ---- agreement: contention-free FIFO + preemptive scenarios vs DES ----
     agree_rows = []
-    for label, n, scen_rate in [
-        ("serialized", 4, 0.002),          # huge gaps: jobs never overlap
-        ("uncontended", 64, rate),         # overlap, slots never exhausted
-        ("contended", 4, rate),            # the approximation zone (report)
+    for label, n, nfast, spd, pol, scen_rate, hard in [
+        ("serialized", 4, 0, 1.0, 0, 0.002, True),  # huge gaps: no overlap
+        ("uncontended", 64, 0, 1.0, 0, rate, True),  # slots never exhausted
+        ("het uncontended", 64, 32, 2.0, 0, rate, True),   # mixed fleet
+        ("contended", 4, 0, 1.0, 0, rate, False),   # the approximation zone
+        ("het contended", 4, 2, 2.0, 0, rate, False),
     ]:
-        cc = ClusterConfig(num_nodes=n)
+        cc = _fleet_config(n, 2, 2, pol, 0.05, fast=nfast, speedup=spd)
         des = simulate_workload(rescale(trace, scen_rate), cc, CLEAN)
         des_fin = np.array([j.finish for j in des.jobs])
         out = simulate_batch(scenario_batch(
             cols, np.array([float(n)]), np.array([2.0]), np.array([2.0]),
-            np.array([0.0]), np.array([0.05]), np.array([scen_rate])))
+            np.array([float(pol)]), np.array([0.05]),
+            np.array([scen_rate]), fast=np.array([float(nfast)]),
+            speedup=np.array([spd])))
         assert out["converged"][0] == 1.0, f"{label}: rollout truncated"
         rel = float(np.max(np.abs(out["finish"][0] - des_fin)
                            / np.maximum(des_fin, 1e-9)))
-        if label != "contended":
+        if hard:
             assert rel < 1e-3, f"{label}: DES<->vector mismatch {rel:.2e}"
         agree_rows.append([label, n, scen_rate, rel,
+                           des.p95_latency, float(out["p95_latency"][0])])
+
+    # preemptive schedulers: the canonical big/small kill-and-requeue
+    # scenario reproduces the DES exactly for fair_preempt AND capacity
+    bs_trace = _big_small_trace()
+    bs_cols = pack_trace(bs_trace)
+    for label, pol in [("fair_preempt big/small", 2),
+                       ("capacity big/small", 3)]:
+        cc = _fleet_config(2, 2, 2, pol, 0.05)
+        des = simulate_workload(bs_trace, cc, CLEAN)
+        assert des.num_preempted > 0, f"{label}: preemption did not fire"
+        out = simulate_batch(scenario_batch(
+            bs_cols, np.array([2.0]), np.array([2.0]), np.array([2.0]),
+            np.array([float(pol)]), np.array([0.05]), np.array([1.0]),
+            queue_frac=[0.5, 0.5]))
+        assert out["converged"][0] == 1.0, f"{label}: rollout truncated"
+        des_fin = np.array([j.finish for j in des.jobs])
+        rel = float(np.max(np.abs(out["finish"][0] - des_fin)
+                           / np.maximum(des_fin, 1e-9)))
+        assert rel < 1e-3, f"{label}: DES<->vector mismatch {rel:.2e}"
+        agree_rows.append([label, 2, 1.0, rel,
+                           des.p95_latency, float(out["p95_latency"][0])])
+
+    # preemptive under a contended mixed workload: the wave-merge
+    # approximation zone — asserted at the aggregate (p95) level only
+    for label, pol in [("fair_preempt mixed", 2), ("capacity mixed", 3)]:
+        cc = _fleet_config(4, 2, 2, pol, 0.05)
+        des = simulate_workload(rescale(trace, 0.02), cc, CLEAN)
+        qf = [1.0 / 4] * 4
+        out = simulate_batch(scenario_batch(
+            cols, np.array([4.0]), np.array([2.0]), np.array([2.0]),
+            np.array([float(pol)]), np.array([0.05]), np.array([0.02]),
+            queue_frac=qf))
+        assert out["converged"][0] == 1.0, f"{label}: rollout truncated"
+        des_fin = np.array([j.finish for j in des.jobs])
+        rel = float(np.max(np.abs(out["finish"][0] - des_fin)
+                           / np.maximum(des_fin, 1e-9)))
+        p95_rel = abs(float(out["p95_latency"][0]) - des.p95_latency) \
+            / max(des.p95_latency, 1e-9)
+        assert p95_rel < 0.15, f"{label}: p95 drifted {p95_rel:.2%} from DES"
+        agree_rows.append([label, 4, 0.02, rel,
                            des.p95_latency, float(out["p95_latency"][0])])
 
     # ---- throughput: planner grid, vector batch vs per-scenario DES ----
@@ -131,6 +224,30 @@ def run(quick: bool = False, smoke: bool = False) -> list[str]:
     if not small:
         assert speedup >= 50.0, f"vector speedup {speedup:.1f}x < 50x target"
 
+    # the full scenario family: all four policies + heterogeneous fleets,
+    # grouped by policy (one compile per scheduler family); reported, with
+    # convergence asserted
+    pols = rng.choice([0.0, 1.0, 2.0, 3.0], batch)
+    fasts = np.minimum(rng.choice([0.0, 4.0, 8.0], batch), nodes)
+    spds = np.where(fasts > 0, rng.choice([1.5, 2.0], batch), 1.0)
+    qf = [1.0 / 4] * 4
+    mix_groups = []
+    for p in (0.0, 1.0, 2.0, 3.0):
+        mask = pols == p
+        scen = scenario_batch(cols, nodes[mask], mpn[mask], rpn[mask],
+                              pols[mask], slow[mask], rates[mask],
+                              fast=fasts[mask], speedup=spds[mask],
+                              queue_frac=qf)
+        mix_groups.append((scen, estimate_steps(scen)))
+    for scen, n_steps in mix_groups:
+        simulate_batch(scen, n_steps=n_steps)
+    with timer() as t_mix:
+        mix_outs = [simulate_batch(scen, n_steps=n_steps)
+                    for scen, n_steps in mix_groups]
+    for out in mix_outs:
+        assert float(out["converged"].mean()) == 1.0, "unconverged mix rows"
+    mix_rate = batch / t_mix.s
+
     caps = "/".join(str(ns) for _, ns in groups)
     lines = [
         f"workload: {n_jobs} Poisson jobs over the 4-class mix; planner "
@@ -139,7 +256,9 @@ def run(quick: bool = False, smoke: bool = False) -> list[str]:
         f"{', smoke' if smoke else ', quick' if quick else ''}",
         "",
         "DES<->vector agreement (per-job finish times, rtol; contention-free "
-        "FIFO rows **asserted** < 1e-3, the contended row reported):",
+        "FIFO rows — homogeneous AND heterogeneous — plus the big/small "
+        "preemption scenarios **asserted** < 1e-3; contended rows reported, "
+        "preemptive mixed rows asserted at p95 < 15%):",
         "",
     ]
     lines += table(
@@ -155,10 +274,12 @@ def run(quick: bool = False, smoke: bool = False) -> list[str]:
     lines += table(
         ["path", "scenarios", "wall s", "scenarios/s"],
         [["python DES (per scenario)", n_des, t_des.s, des_rate],
-         ["vectorized wave rollout", batch, t_vec.s, vec_rate]],
+         ["vectorized wave rollout (fifo/fair)", batch, t_vec.s, vec_rate],
+         ["vectorized, 4 policies + het fleets", batch, t_mix.s, mix_rate]],
     )
     lines += ["", f"**vectorized speedup: {speedup:.0f}x** scenarios/s "
-                  "over the per-scenario DES"]
+                  "over the per-scenario DES "
+                  f"({mix_rate / des_rate:.0f}x on the full policy/fleet mix)"]
     write_md("cluster.md", "Vectorized capacity planner throughput", lines)
     return lines
 

@@ -4,12 +4,13 @@
              sort / filter / aggregate), generated at unit rate so the
              offered load itself is a searchable knob.
 2. BASELINE  run the multi-job DES on today's cluster: per-job queueing
-             delay, p95 latency, slot utilization, FIFO vs fair-share,
-             and what a burst or a node failure does to the tail.
-3. PLAN      search (nodes x slots x scheduler x slowstart x offered load)
-             with the vectorized wave simulator behind ``ClusterEvaluator``
-             — thousands of (config x workload-seed) scenarios per compiled
-             call, exhaustive grid + streamed top-k.
+             delay, p95 latency, slot utilization, FIFO vs fair-share vs
+             preemptive fair-share vs capacity queues, a heterogeneous
+             fleet, and what a burst or a node failure does to the tail.
+3. PLAN      search (nodes x fleet mix x slots x scheduler policy x
+             slowstart) with the vectorized wave simulator behind
+             ``ClusterEvaluator`` — thousands of (config x workload-seed)
+             scenarios per compiled call, exhaustive grid + streamed top-k.
 4. ANSWER    concurrent capacity what-ifs through the same async
              WhatIfService that serves the single-job model.
 5. VERIFY    the recommended cluster on the trusted DES.
@@ -22,6 +23,7 @@ import numpy as np
 from repro.cluster import (
     ClusterConfig,
     ClusterEvaluator,
+    NodeClass,
     bursty_trace,
     default_job_classes,
     poisson_trace,
@@ -43,6 +45,16 @@ for label, cc, tr, sc in [
     ("steady Poisson, fair",
      ClusterConfig(num_nodes=8, scheduler="fair"), rescale(trace, RATE),
      SimConfig(seed=1)),
+    ("steady Poisson, fair+preempt",
+     ClusterConfig(num_nodes=8, scheduler="fair_preempt",
+                   preempt_timeout=10.0),
+     rescale(trace, RATE), SimConfig(seed=1)),
+    ("capacity queues (equal)",
+     ClusterConfig(num_nodes=8, scheduler="capacity", preempt_timeout=10.0),
+     rescale(trace, RATE), SimConfig(seed=1)),
+    ("4 fast(2x) + 4 base nodes",
+     ClusterConfig(node_classes=(NodeClass(4, 2.0), NodeClass(4, 1.0))),
+     rescale(trace, RATE), SimConfig(seed=1)),
     ("burst of 8 jobs", today,
      bursty_trace(classes, n_bursts=4, burst_size=8, burst_gap=120.0),
      SimConfig(seed=1)),
@@ -54,16 +66,18 @@ for label, cc, tr, sc in [
     print(f"  {label:30s} p95={r.p95_latency:7.1f}s mean={r.mean_latency:6.1f}s "
           f"queue p95={np.percentile(delays, 95):6.1f}s "
           f"util={r.slot_utilization:.2f} spec={r.num_speculative_launched} "
-          f"reruns={r.num_failure_reruns}")
+          f"reruns={r.num_failure_reruns} kills={r.num_preempted}")
 
 # ---- 3: the capacity planner ----
 ev = ClusterEvaluator(classes, n_jobs=32, n_seeds=2, base=today,
                       base_rate=RATE, objective="p95", chunk=256)
 space = {
-    "pNumNodes": [4.0, 8.0, 16.0, 32.0],
+    "pNumNodes": [4.0, 8.0, 16.0],
+    "pNumFastNodes": [0.0, 4.0],          # fleet mix: that many 2x nodes
+    "fastSpeedup": [2.0],
     "pMaxMapsPerNode": [2.0, 4.0],
     "pMaxRedPerNode": [2.0, 4.0],
-    "schedFair": [0.0, 1.0],
+    "schedPolicy": [0.0, 1.0, 2.0, 3.0],  # fifo/fair/fair_preempt/capacity
     "pReduceSlowstart": [0.05, 0.8],
 }
 plan = grid_search_ev(ev, space)
@@ -82,7 +96,8 @@ with WhatIfService(ev) as svc:
     futures = {
         "plan, at 2x load": svc.probe({**best, "arrivalRate": 2 * RATE}),
         "plan, half the nodes": svc.probe(
-            {**best, "pNumNodes": max(best["pNumNodes"] / 2, 1)}),
+            {**best, "pNumNodes": max(best["pNumNodes"] / 2, 1),
+             "pNumFastNodes": best.get("pNumFastNodes", 0) / 2}),
         "load sweep @plan": svc.sweep(
             "arrivalRate", [0.04, 0.08, 0.16, 0.32],
             base={k: v for k, v in best.items()}),

@@ -127,7 +127,8 @@ register_model(
 )
 register_model(
     "cluster", _cluster_factory,
-    doc="multi-job capacity planner (nodes/slots/scheduler/slowstart/arrival rate)",
+    doc="multi-job capacity planner (nodes + fast/slow fleet mix, slots, "
+        "fifo/fair/fair_preempt/capacity policies, slowstart, arrival rate)",
 )
 
 

@@ -10,10 +10,13 @@ contention, and what cluster shape minimizes tail latency?  Three layers:
   bursty, replayed), generated at unit rate and rescaled so offered load is
   a searchable knob.
 * :mod:`~repro.cluster.sched` — the multi-job discrete-event simulator:
-  FIFO / fair-share scheduling over shared slot pools, per-job queueing
-  delay / latency / makespan, per-node busy time, with the single-job
-  simulator's straggler / speculation / failure mechanics (and its exact
-  behaviour on a one-job trace).
+  FIFO / fair-share / preemptive fair-share / capacity scheduling over
+  shared slot pools (kill-and-requeue preemption with a configurable
+  grace timeout, per-job-class guaranteed capacities), heterogeneous
+  fleets (:class:`NodeClass` speed factors), per-job queueing delay /
+  latency / makespan, per-node busy time, with the single-job simulator's
+  straggler / speculation / failure mechanics (and its exact behaviour on
+  a one-job trace).
 * :mod:`~repro.cluster.vector_sim` + :mod:`~repro.cluster.evaluator` — the
   wave-level JAX rollout (``while_loop`` over scheduling rounds, ``vmap``
   over scenarios, device-sharded via :mod:`repro.compat`) and
@@ -25,15 +28,16 @@ contention-free FIFO scenarios and measures scenario throughput;
 ``examples/capacity_planning.py`` is the end-to-end walkthrough.
 """
 
-from .evaluator import ClusterEvaluator
+from .evaluator import ClusterEvaluator, UnfinishedWorkloadError, cluster_space
 from .sched import (
     ClusterConfig,
     ClusterTaskRecord,
     JobStats,
+    NodeClass,
     WorkloadResult,
     simulate_workload,
 )
-from .vector_sim import estimate_steps, pack_trace, simulate_batch
+from .vector_sim import POLICIES, estimate_steps, pack_trace, simulate_batch
 from .workload import (
     JobArrival,
     JobClass,
@@ -61,10 +65,14 @@ __all__ = [
     "ClusterConfig",
     "ClusterTaskRecord",
     "JobStats",
+    "NodeClass",
     "WorkloadResult",
     "simulate_workload",
+    "POLICIES",
     "pack_trace",
     "estimate_steps",
     "simulate_batch",
     "ClusterEvaluator",
+    "UnfinishedWorkloadError",
+    "cluster_space",
 ]

@@ -1,9 +1,9 @@
-"""Multi-job discrete-event cluster simulator (FIFO + fair-share).
+"""Multi-job discrete-event cluster simulator (FIFO / fair / preemptive).
 
 Extends the single-job Task Scheduler Simulator (paper §5(i),
 :mod:`repro.core.hadoop.simulator`) to a *shared* virtual cluster: a
 workload trace of jobs (:mod:`repro.cluster.workload`) contends for one
-pool of map slots and one pool of reduce slots across ``num_nodes`` nodes.
+pool of map slots and one pool of reduce slots across the fleet's nodes.
 Per-task costs still come from the paper's §2-§4 models, and the per-job
 mechanics are the single-job simulator's, job-tagged:
 
@@ -16,6 +16,14 @@ mechanics are the single-job simulator's, job-tagged:
   mechanics (a node failure kills tasks of *every* job on the node and
   re-executes lost map outputs of unfinished jobs).
 
+Heterogeneous fleets: ``ClusterConfig.node_classes`` describes a mixed
+fleet (e.g. ``4 x fast + 8 x slow``) as :class:`NodeClass` entries.  A
+node's *compute* durations (map work, reduce sort/reduce/write work) are
+divided by its class ``speedup``; the shuffle is network-bound and is not
+scaled.  The free-slot picker prefers faster nodes, so on an uncontended
+fleet the fast class fills first — the same rule the vectorized wave model
+uses, which is what keeps the two in agreement on contention-free cases.
+
 Scheduling policies:
 
 * ``fifo``  — free slots go to the earliest-submitted job with pending
@@ -26,6 +34,19 @@ Scheduling policies:
   is arrival frequency in generated traces, *not* a scheduling share —
   the vectorized model splits the same way, so ``evaluate`` and
   ``exact_cost`` agree on what "fair" means.
+* ``fair_preempt`` — fair-share with preemption: when a demanding job has
+  been held below the floor fair share for ``preempt_timeout`` seconds
+  while another job runs above it, the scheduler kills the most-over-share
+  job's newest task (speculative copies first) and requeues it — Hadoop
+  Fair Scheduler ``minSharePreemptionTimeout`` semantics at job
+  granularity.  Killed tasks re-run from scratch.
+* ``capacity`` — per-job-class queues with guaranteed capacities
+  (``ClusterConfig.capacities``: relative weights per class name,
+  normalized over the classes present; default equal).  Free slots go
+  first to the queue furthest below its guarantee (FIFO within a queue);
+  a queue held below its guaranteed slot count for ``preempt_timeout``
+  seconds reclaims slots by killing the newest task of the most
+  over-guarantee queue.
 
 Determinism: one seeded RNG drives every duration draw; event ties break on
 a monotone sequence number, so runs are bit-identical given a seed.  With
@@ -44,6 +65,7 @@ import heapq
 import random
 from collections import deque
 from dataclasses import dataclass, field
+from typing import Mapping
 
 import numpy as np
 
@@ -53,6 +75,7 @@ from repro.core.hadoop.params import HadoopParams
 from .workload import WorkloadTrace, task_costs
 
 __all__ = [
+    "NodeClass",
     "ClusterConfig",
     "ClusterTaskRecord",
     "JobStats",
@@ -61,21 +84,70 @@ __all__ = [
 ]
 
 _INF = float("inf")
+_EPS = 1e-9
+
+_SCHEDULERS = ("fifo", "fair", "fair_preempt", "capacity")
+
+
+@dataclass(frozen=True)
+class NodeClass:
+    """One hardware class of a mixed fleet: ``count`` nodes whose compute
+    runs ``speedup`` times faster than the baseline (network is shared)."""
+
+    count: int
+    speedup: float = 1.0
+
+    def __post_init__(self):
+        if self.count < 0:
+            raise ValueError(f"node class count must be >= 0, got {self.count}")
+        if self.speedup <= 0:
+            raise ValueError(f"node speedup must be positive, got {self.speedup}")
 
 
 @dataclass(frozen=True)
 class ClusterConfig:
-    """The capacity-planner's knobs: the shared cluster's shape + policy."""
+    """The capacity-planner's knobs: the shared cluster's shape + policy.
+
+    ``node_classes`` describes a heterogeneous fleet; when empty the fleet
+    is ``num_nodes`` baseline (speedup 1.0) nodes.  When given,
+    ``num_nodes`` is derived from the class counts, so the rest of the
+    code has a single source for the fleet size.
+    """
 
     num_nodes: int = 4
     map_slots_per_node: int = 2
     reduce_slots_per_node: int = 2
-    scheduler: str = "fifo"              # "fifo" | "fair"
+    scheduler: str = "fifo"              # "fifo"|"fair"|"fair_preempt"|"capacity"
     reduce_slowstart: float = 0.05       # pReduceSlowstart, cluster-wide
+    node_classes: tuple[NodeClass, ...] = ()
+    preempt_timeout: float = 0.0         # grace s before an over-share kill
+    capacities: tuple[tuple[str, float], ...] = ()   # class name -> rel. weight
 
     def __post_init__(self):
-        if self.scheduler not in ("fifo", "fair"):
+        if self.scheduler not in _SCHEDULERS:
             raise ValueError(f"unknown scheduler: {self.scheduler!r}")
+        if self.preempt_timeout < 0:
+            raise ValueError("preempt_timeout must be >= 0")
+        if isinstance(self.capacities, Mapping):
+            object.__setattr__(
+                self, "capacities", tuple(sorted(self.capacities.items())))
+        if self.node_classes:
+            object.__setattr__(
+                self, "num_nodes", sum(nc.count for nc in self.node_classes))
+
+    @property
+    def preemptive(self) -> bool:
+        return self.scheduler in ("fair_preempt", "capacity")
+
+    def node_speeds(self) -> list[float]:
+        """Per-node compute speed factors, fastest class first (the order
+        the free-slot picker and the wave model's class columns both use)."""
+        if not self.node_classes:
+            return [1.0] * max(1, self.num_nodes)
+        speeds: list[float] = []
+        for nc in sorted(self.node_classes, key=lambda c: -c.speedup):
+            speeds.extend([nc.speedup] * nc.count)
+        return speeds or [1.0]
 
     @classmethod
     def from_params(cls, p: HadoopParams, *, scheduler: str = "fifo"
@@ -136,6 +208,12 @@ class WorkloadResult:
     num_speculative_launched: int = 0
     num_speculative_won: int = 0
     num_failure_reruns: int = 0
+    num_preempted: int = 0
+    #: jobs whose ``finish`` is still inf when the event queue drained (e.g.
+    #: every node failed) — latency aggregates are inf then, and this count
+    #: is the explicit signal consumers must check instead of discovering
+    #: the inf downstream.
+    n_unfinished: int = 0
     records: list[ClusterTaskRecord] = field(default_factory=list)
 
     def latencies(self) -> np.ndarray:
@@ -147,7 +225,14 @@ class WorkloadResult:
 
     @property
     def p95_latency(self) -> float:
-        return float(np.percentile(self.latencies(), 95)) if self.jobs else 0.0
+        if not self.jobs:
+            return 0.0
+        lat = self.latencies()
+        if not np.isfinite(lat).all():
+            # percentile interpolation between infs yields nan — report the
+            # unfinished workload as an explicit inf instead
+            return _INF
+        return float(np.percentile(lat, 95))
 
 
 class _Job:
@@ -193,6 +278,21 @@ class _Job:
         return (self.maps_done()
                 and len(self.completed_reduces) == self.n_reds)
 
+    def running(self, kind: str) -> int:
+        return self.running_maps if kind == "map" else self.running_reds
+
+    def pending(self, kind: str) -> deque:
+        return self.pending_maps if kind == "map" else self.pending_reduces
+
+    def demands(self, kind: str) -> bool:
+        """Arrived and holds or wants a ``kind`` slot (the share divisor)."""
+        if not self.arrived:
+            return False
+        if kind == "map":
+            return bool(self.pending_maps) or self.running_maps > 0
+        return ((self.reducers_launched and bool(self.pending_reduces))
+                or self.running_reds > 0)
+
 
 def simulate_workload(
     trace: WorkloadTrace,
@@ -202,13 +302,31 @@ def simulate_workload(
     """Run a workload trace on a shared virtual cluster."""
     rng = random.Random(sim.seed)
     n_nodes = max(1, cluster.num_nodes)
+    speed = cluster.node_speeds()
+    if len(speed) != n_nodes:      # num_nodes floor for degenerate configs
+        speed = (speed + [1.0] * n_nodes)[:n_nodes]
     map_slots = [cluster.map_slots_per_node] * n_nodes
     red_slots = [cluster.reduce_slots_per_node] * n_nodes
-    fair = cluster.scheduler == "fair"
+    # configured capacity per node (map_slots/red_slots are *free* counts);
+    # zeroed when a node fails, so shares and utilization see live capacity
+    cap_map = [cluster.map_slots_per_node] * n_nodes
+    cap_red = [cluster.reduce_slots_per_node] * n_nodes
+    fail_time = [_INF] * n_nodes
+    policy = cluster.scheduler
+    fair = policy in ("fair", "fair_preempt")
+    capacity = policy == "capacity"
 
     jobs = [_Job(a.job_id, a, n_nodes) for a in trace.arrivals]
     by_id = {j.jid: j for j in jobs}
     res = WorkloadResult(jobs=[j.stats for j in jobs], makespan=0.0)
+
+    # capacity queues: one per job-class name; guaranteed share = the
+    # class's weight (ClusterConfig.capacities, default 1.0) normalized
+    # over the classes present in this trace.
+    queue_names = sorted({j.name for j in jobs})
+    cap_weights = dict(cluster.capacities)
+    w_total = sum(cap_weights.get(q, 1.0) for q in queue_names) or 1.0
+    guarantee_frac = {q: cap_weights.get(q, 1.0) / w_total for q in queue_names}
 
     # running[uid] = (jid, kind, index, node, start, end, speculative)
     running: dict[int, tuple] = {}
@@ -220,7 +338,8 @@ def simulate_workload(
     # Event heap: (time, order_class, seq, tag, payload).  order_class makes
     # simultaneous events deterministic: failures first, then arrivals, then
     # task completions (matching the single-job simulator, which applies a
-    # failure before any completion at the same timestamp).
+    # failure before any completion at the same timestamp), then preemption
+    # checks (a completion at the same instant may resolve the starvation).
     events: list[tuple] = []
 
     def push(time: float, order_class: int, tag: str, payload: int) -> None:
@@ -234,7 +353,11 @@ def simulate_workload(
         push(j.submit, 1, "arrive", j.jid)
 
     def free_slot(slots: list[int], prefer_not: int = -1) -> int:
-        order = sorted(range(n_nodes), key=lambda nd: (nd == prefer_not, -slots[nd]))
+        # fastest class first (ties keep the homogeneous order: most free
+        # slots, then node index), so mixed fleets fill fast nodes before
+        # slow ones — the wave model's class-ordered allocation rule.
+        order = sorted(range(n_nodes),
+                       key=lambda nd: (nd == prefer_not, -speed[nd], -slots[nd]))
         for nd in order:
             if slots[nd] > 0:
                 return nd
@@ -252,15 +375,18 @@ def simulate_workload(
         uid_counter += 1
         job.stats.first_launch = min(job.stats.first_launch, now)
         if kind == "map":
-            dur = _duration(job.map_cost, rng, sim)
+            dur = _duration(job.map_cost, rng, sim) / speed[node]
             end = now + dur
             running[uid] = (job.jid, kind, index, node, now, end, speculative)
             job.map_copies.setdefault(index, []).append(uid)
             job.running_maps += 1
             push(end, 2, "task", uid)
         else:
+            # shuffle is network-bound (not node-scaled); the sort/reduce/
+            # write work runs on the node's cores and scales with its class
             sh = _duration(job.shuffle, rng, sim) if job.shuffle > 0 else 0.0
-            wk = _duration(job.red_cost, rng, sim) if job.red_cost > 0 else 0.0
+            wk = (_duration(job.red_cost, rng, sim) / speed[node]
+                  if job.red_cost > 0 else 0.0)
             reduce_durs[uid] = (sh, wk)
             job.red_copies.setdefault(index, []).append(uid)
             job.running_reds += 1
@@ -286,8 +412,19 @@ def simulate_workload(
 
     # ---------------- scheduling policy ----------------
 
+    def queue_running(kind: str) -> dict[str, int]:
+        out = {q: 0 for q in queue_names}
+        for j in jobs:
+            out[j.name] += j.running(kind)
+        return out
+
+    def kind_capacity(kind: str) -> int:
+        return sum(cap_map) if kind == "map" else sum(cap_red)
+
     def pick_job(kind: str):
         """The job the next free ``kind`` slot goes to, or None."""
+        qrun = queue_running(kind) if capacity else None
+        cap = kind_capacity(kind) if capacity else 0
         best = None
         best_key = None
         for j in jobs:
@@ -301,11 +438,19 @@ def simulate_workload(
                 if not (j.reducers_launched and j.pending_reduces):
                     continue
                 load = j.running_reds
-            # fair = equal per-job shares of each pool (JobClass.weight is
-            # arrival frequency, not a scheduling share — the vector model
-            # splits the same way, so evaluate() and exact_cost() agree on
-            # what "fair" means)
-            key = ((load,) if fair else ()) + (j.submit, j.jid)
+            if capacity:
+                # queues furthest below their guaranteed share first,
+                # FIFO within a queue (Hadoop CapacityScheduler ordering)
+                guar = max(guarantee_frac[j.name] * cap, _EPS)
+                key = (qrun[j.name] / guar, j.submit, j.jid)
+            elif fair:
+                # fair = equal per-job shares of each pool (JobClass.weight
+                # is arrival frequency, not a scheduling share — the vector
+                # model splits the same way, so evaluate() and exact_cost()
+                # agree on what "fair" means)
+                key = (load, j.submit, j.jid)
+            else:
+                key = (j.submit, j.jid)
             if best_key is None or key < best_key:
                 best, best_key = j, key
         return best
@@ -349,6 +494,117 @@ def simulate_workload(
             if projected > sim.speculative_slowdown_thr * mean and now > eff_start:
                 launch(j, kind, index, now, speculative=True, avoid_node=node)
 
+    # ---------------- preemption (fair_preempt / capacity) ----------------
+
+    # starved_since[kind]: when the current starvation episode began, or
+    # None.  A "preempt" event is scheduled episode-start + timeout; kills
+    # only happen if the episode is still live when it fires.
+    starved_since: dict[str, float | None] = {"map": None, "reduce": None}
+    _KIND_ID = {"map": 0, "reduce": 1}
+    _ID_KIND = {0: "map", 1: "reduce"}
+
+    def fair_floor(kind: str) -> int:
+        n_demand = sum(1 for j in jobs if j.demands(kind))
+        return kind_capacity(kind) // n_demand if n_demand else 0
+
+    def starved_entities(kind: str) -> bool:
+        """Is any demanding entity below its floor share with work queued?"""
+        if capacity:
+            qrun = queue_running(kind)
+            cap = kind_capacity(kind)
+            for q in queue_names:
+                floor_q = int(guarantee_frac[q] * cap)
+                if qrun[q] >= floor_q:
+                    continue
+                for j in jobs:
+                    if j.name == q and j.arrived and j.pending(kind) and (
+                            kind == "map" or j.reducers_launched):
+                        return True
+            return False
+        floor = fair_floor(kind)
+        for j in jobs:
+            if not (j.arrived and j.pending(kind)):
+                continue
+            if kind == "reduce" and not j.reducers_launched:
+                continue
+            if j.running(kind) < floor:
+                return True
+        return False
+
+    def pick_victim(kind: str) -> int | None:
+        """The uid to kill: newest task (speculative copies first) of the
+        entity furthest over its floor share / guarantee."""
+        if capacity:
+            qrun = queue_running(kind)
+            cap = kind_capacity(kind)
+            over = {q: qrun[q] - int(guarantee_frac[q] * cap)
+                    for q in queue_names}
+            victim_q = max((q for q in queue_names if over[q] > 0),
+                           key=lambda q: (over[q], q), default=None)
+            if victim_q is None:
+                return None
+            member = lambda jid: by_id[jid].name == victim_q
+        else:
+            floor = fair_floor(kind)
+            over_jobs = [j for j in jobs if j.running(kind) > floor]
+            if not over_jobs:
+                return None
+            victim_j = max(over_jobs,
+                           key=lambda j: (j.running(kind) - floor, -j.jid))
+            member = lambda jid: jid == victim_j.jid
+        best_uid, best_key = None, None
+        for uid, (jid, k, index, node, start, end, spec) in running.items():
+            if k != kind or not member(jid):
+                continue
+            key = (spec, start, uid)     # speculative first, then newest
+            if best_key is None or key > best_key:
+                best_uid, best_key = uid, key
+        return best_uid
+
+    def kill_task(uid: int, now: float) -> None:
+        jid, kind, index, node, start, end, spec = running.pop(uid)
+        j = by_id[jid]
+        (map_slots if kind == "map" else red_slots)[node] += 1
+        copies = j.map_copies if kind == "map" else j.red_copies
+        if uid in copies.get(index, []):
+            copies[index].remove(uid)
+        if kind == "map":
+            j.running_maps -= 1
+            completed, pending = j.completed_maps, j.pending_maps
+        else:
+            j.running_reds -= 1
+            completed, pending = j.completed_reduces, j.pending_reduces
+            reduce_durs.pop(uid, None)
+        res.records.append(
+            ClusterTaskRecord(jid, kind, index, node, start, now, spec,
+                              killed=True))
+        alive_copies = any(c in running for c in copies.get(index, []))
+        if index not in completed and index not in pending and not alive_copies:
+            pending.append(index)
+
+    def do_preempt(kind: str, now: float) -> None:
+        while starved_entities(kind):
+            uid = pick_victim(kind)
+            if uid is None:
+                break
+            kill_task(uid, now)
+            res.num_preempted += 1
+            fill_slots(now)       # pick_job hands the slot to the starved job
+
+    def check_preempt(now: float) -> None:
+        if not cluster.preemptive:
+            return
+        for kind in ("map", "reduce"):
+            if starved_entities(kind) and pick_victim(kind) is not None:
+                if starved_since[kind] is None:
+                    starved_since[kind] = now
+                    push(now + cluster.preempt_timeout, 3, "preempt",
+                         _KIND_ID[kind])
+            else:
+                starved_since[kind] = None
+
+    # ---------------- failures ----------------
+
     def fail_node(fnode: int, ftime: float) -> None:
         for uid, (jid, kind, index, node, start, end, spec) in list(running.items()):
             if node != fnode:
@@ -364,6 +620,7 @@ def simulate_workload(
                     j.pending_maps.append(index)
             else:
                 j.running_reds -= 1
+                reduce_durs.pop(uid, None)      # killed copy: drop its draws
                 if (index not in j.completed_reduces
                         and index not in j.pending_reduces):
                     j.pending_reduces.append(index)
@@ -385,6 +642,9 @@ def simulate_workload(
                     res.num_failure_reruns += 1
         map_slots[fnode] = 0
         red_slots[fnode] = 0
+        cap_map[fnode] = 0
+        cap_red[fnode] = 0
+        fail_time[fnode] = min(fail_time[fnode], ftime)
 
     def finish_job(job: _Job, now: float) -> None:
         if job.done() and not job.pending_maps and not job.pending_reduces:
@@ -399,11 +659,22 @@ def simulate_workload(
         if tag == "fail":
             fail_node(payload, t)
             fill_slots(clock)
+            check_preempt(clock)
             continue
 
         if tag == "arrive":
             by_id[payload].arrived = True
             fill_slots(clock)
+            check_preempt(clock)
+            continue
+
+        if tag == "preempt":
+            kind = _ID_KIND[payload]
+            since = starved_since[kind]
+            if since is not None and t >= since + cluster.preempt_timeout - _EPS:
+                do_preempt(kind, clock)
+                starved_since[kind] = None
+                check_preempt(clock)     # re-arm if still starved
             continue
 
         uid = payload
@@ -453,6 +724,7 @@ def simulate_workload(
         else:
             red_slots[node] += 1
             job.running_reds -= 1
+            reduce_durs.pop(uid, None)
             if index not in job.completed_reduces:
                 job.completed_reduces.add(index)
                 # stall-free duration (see maybe_speculate)
@@ -465,6 +737,7 @@ def simulate_workload(
                         _, k2, i2, n2, s2, e2, sp2 = running.pop(sib)
                         red_slots[n2] += 1
                         job.running_reds -= 1
+                        reduce_durs.pop(sib, None)
                         res.records.append(ClusterTaskRecord(
                             jid, k2, i2, n2, s2, clock, sp2, killed=True))
                 job.red_copies[index] = []
@@ -472,15 +745,27 @@ def simulate_workload(
             maybe_speculate(clock)
             finish_job(job, clock)
 
+        check_preempt(clock)
         res.makespan = max(res.makespan, clock)
 
-    # ---------------- slot-occupancy summary ----------------
+    # ---------------- completion / slot-occupancy summary ----------------
+    # drift guard for the reduce_durs bookkeeping: an entry must not outlive
+    # its running task (entries used to leak for the life of the simulation
+    # on every failure-kill and speculative-sibling kill)
+    assert set(reduce_durs) == {
+        u for u, v in running.items() if v[1] == "reduce"
+    }, "reduce_durs leaked entries for dead tasks"
+    res.n_unfinished = sum(1 for j in jobs if not np.isfinite(j.stats.finish))
     res.node_busy_s = [0.0] * n_nodes
     for rec in res.records:
         res.node_busy_s[rec.node] += rec.end - rec.start
     span = res.makespan
-    slot_seconds = span * n_nodes * (
-        cluster.map_slots_per_node + cluster.reduce_slots_per_node)
+    # capacity integrated over time: a failed node only contributes slot-
+    # seconds up to its failure (the old denominator charged dead nodes for
+    # the whole makespan, under-reporting utilization on failure runs)
+    per_node = cluster.map_slots_per_node + cluster.reduce_slots_per_node
+    slot_seconds = sum(per_node * min(span, fail_time[nd])
+                       for nd in range(n_nodes))
     if slot_seconds > 0:
         res.slot_utilization = sum(res.node_busy_s) / slot_seconds
     return res

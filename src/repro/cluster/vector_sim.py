@@ -12,8 +12,22 @@ Model (wave-discrete, deterministic):
 
 * a job's launched tasks form *wave buckets* that complete together after
   one task duration — launches at an event join (and extend) the bucket;
+* **heterogeneous fleets**: slots live in per-class columns (``C`` node
+  classes, fastest first); a task launched into class ``c`` runs its
+  compute ``speedup[c]`` times faster (the shuffle is network-bound and
+  unscaled), so each job carries one wave bucket *per class* and free
+  slots fill fast classes first — the DES's free-slot order;
 * FIFO hands free slots to jobs in arrival order (prefix-sum allocation);
-  fair-share water-fills the pool (fractional max-min shares);
+  fair-share water-fills the pool (integer max-min shares);
+* **preemptive policies** reallocate at wave boundaries: at every event
+  the scheduler recomputes each job's *target* allocation over the total
+  capacity — fair water-fill (``fair_preempt``) or per-queue guaranteed
+  capacities with FIFO spill (``capacity``) — kills running slots above
+  the target (requeued to the todo pool, slowest class first; killed work
+  is lost, as in the DES's kill-and-requeue) and launches up to it.  The
+  DES's ``preempt_timeout`` grace is below wave resolution: the wave
+  model preempts immediately at event boundaries, which the agreement
+  tolerance for preemptive scenarios absorbs;
 * reduces honor slowstart and the two-phase semantics: waves launched
   before the job's maps finish stall, then complete at
   ``max(map_finish, start + shuffle) + work`` — the DES rule verbatim.
@@ -22,17 +36,28 @@ Fidelity: on **contention-free FIFO** scenarios (every job's wave gets its
 full slot demand the moment it asks — serialized jobs, or an unsaturated
 cluster) wave buckets coincide with the DES's task waves and the rollout
 reproduces per-job finish times *exactly* (float32 rounding aside; the
-agreement test asserts rtol 1e-3).  Under slot contention partial waves
-merge into one bucket per job, a work-conserving approximation the
+agreement test asserts rtol 1e-3) — including heterogeneous fleets, where
+both models fill the fast class first and each class's sub-wave completes
+at its own scaled duration.  Under slot contention partial waves merge
+into one bucket per (job, class), a work-conserving approximation the
 capacity planner accepts in exchange for ~3 orders of magnitude more
 scenarios/s; ``ClusterEvaluator.exact_cost`` routes final candidates back
 through the DES.
 
-Scenario batches are dicts of arrays (B = scenarios, J = jobs):
+Scenario batches are dicts of arrays (B = scenarios, J = jobs, C = node
+classes, Q = capacity queues):
 
-  arrival (B, J)   n_maps (B, J)   n_reds (B, J)    map_cost (B, J)
-  red_work (B, J)  shuffle (B, J)  map_slots (B,)   red_slots (B,)
-  fair (B,)        slowstart (B,)
+  arrival (B, J)    n_maps (B, J)     n_reds (B, J)     map_cost (B, J)
+  red_work (B, J)   shuffle (B, J)    queue (B, J)
+  map_slots (B, C)  red_slots (B, C)  speedup (B, C)
+  policy (B,)       slowstart (B,)    queue_frac (B, Q)
+
+``policy`` is 0 = fifo, 1 = fair, 2 = fair_preempt, 3 = capacity (the
+:data:`POLICIES` order).  :func:`simulate_batch` normalizes legacy inputs:
+a ``fair`` (B,) column is accepted as ``policy``, 1-D ``map_slots`` /
+``red_slots`` become one baseline class, ``speedup`` defaults to ones
+(classes are re-sorted fastest-first), ``queue`` / ``queue_frac`` default
+to a single queue.
 
 Use :func:`pack_trace` to turn a :class:`~repro.cluster.workload.
 WorkloadTrace` into per-job columns, and :func:`estimate_steps` to bound
@@ -55,18 +80,26 @@ from repro import compat
 
 from .workload import WorkloadTrace, shuffle_full, task_costs
 
-__all__ = ["pack_trace", "estimate_steps", "simulate_batch"]
+__all__ = ["POLICIES", "pack_trace", "estimate_steps", "simulate_batch"]
 
 _EPS = 1e-3          # event-time / task-count slack (durations are >= ~0.1 s)
 _INF = jnp.inf
+
+#: scheduler-policy encoding of the ``policy`` scenario column — index into
+#: this tuple; matches ``ClusterConfig.scheduler`` names.
+POLICIES = ("fifo", "fair", "fair_preempt", "capacity")
 
 
 def pack_trace(trace: WorkloadTrace) -> dict[str, np.ndarray]:
     """Per-job columns (J,) for one trace.  ``shuffle`` is the all-remote
     limit (:func:`~repro.cluster.workload.shuffle_full`); multiply by the
-    candidate cluster's remote fraction ``(n-1)/n`` before simulating."""
+    candidate cluster's remote fraction ``(n-1)/n`` before simulating.
+    ``queue`` is the job's capacity-scheduler queue: the index of its job
+    class name in sorted order (the DES's queue enumeration)."""
     cols = {k: [] for k in ("arrival", "n_maps", "n_reds", "map_cost",
-                            "red_work", "shuffle")}
+                            "red_work", "shuffle", "queue")}
+    qidx = {name: i for i, name in
+            enumerate(sorted({a.klass.name for a in trace.arrivals}))}
     for a in trace.arrivals:
         mc, rc, _ = task_costs(a.klass)
         cols["arrival"].append(a.submit_time)
@@ -75,6 +108,7 @@ def pack_trace(trace: WorkloadTrace) -> dict[str, np.ndarray]:
         cols["map_cost"].append(mc)
         cols["red_work"].append(rc)
         cols["shuffle"].append(shuffle_full(a.klass))
+        cols["queue"].append(qidx[a.klass.name])
     return {k: np.asarray(v, dtype=np.float64) for k, v in cols.items()}
 
 
@@ -83,15 +117,86 @@ def estimate_steps(scen: Mapping[str, np.ndarray], *, margin: float = 2.0
     """Step *cap* covering every wave event, rounded up to a power of two
     so compile count stays bounded across workloads.  The rollout is a
     ``while_loop`` that stops at the batch's last event, so a generous cap
-    costs nothing; ``margin`` absorbs wave fragmentation under contention,
+    costs nothing; ``margin`` absorbs wave fragmentation under contention
+    (doubled when preemptive rows are present — kills re-fragment waves),
     and truncation at the cap is detected, not silent (``converged``)."""
-    ms = np.maximum(np.asarray(scen["map_slots"], dtype=np.float64), 1.0)
-    rs = np.maximum(np.asarray(scen["red_slots"], dtype=np.float64), 1.0)
+    def total(key):
+        a = np.asarray(scen[key], dtype=np.float64)
+        return np.maximum(a.sum(axis=-1) if a.ndim == 2 else a, 1.0)
+    ms, rs = total("map_slots"), total("red_slots")
     waves = (np.ceil(scen["n_maps"] / ms[:, None]).sum(axis=1)
              + np.ceil(scen["n_reds"] / rs[:, None]).sum(axis=1))
+    pol = np.asarray(scen.get("policy", scen.get("fair", 0.0)))
+    if np.any(pol >= 2):
+        margin = margin * 2.0
     n_jobs = scen["arrival"].shape[-1]
     est = int(np.max(waves) * margin) + n_jobs + 8
     return 1 << (est - 1).bit_length()
+
+
+# --------------------------------------------------------------------------
+# allocation primitives (single scenario; all shapes noted for one row)
+# --------------------------------------------------------------------------
+
+
+def _prefix(demand, cap):
+    """FIFO: prefix allocation in arrival order (jobs are arrival-sorted)."""
+    cum = jnp.cumsum(demand) - demand
+    return jnp.clip(cap - cum, 0.0, demand)
+
+
+def _waterfill(demand, cap):
+    """Fair: integer equal shares, leftover spilled FIFO (a one-pass
+    max-min approximation; the DES is the slot-exact reference).  Whole
+    slots throughout, matching the DES's slot granularity — fractional
+    shares would extend wave buckets by a full task duration for an
+    epsilon of work and never converge."""
+    act = demand > _EPS
+    share = jnp.floor(cap / jnp.maximum(act.sum(), 1) + _EPS)
+    a = jnp.minimum(demand, share)
+    need = demand - a
+    cum2 = jnp.cumsum(need) - need
+    return a + jnp.clip(jnp.floor(cap - a.sum() + _EPS) - cum2, 0.0, need)
+
+
+def _capacity_fill(demand, cap, onehot, queue_frac):
+    """Capacity scheduler target: pass 1 fills each queue up to its
+    guaranteed slot count (``floor(frac * cap)``, FIFO within the queue);
+    pass 2 spills the leftover capacity FIFO over the remaining demand."""
+    # sum(floor(frac * cap)) <= cap because fracs sum to <= 1 (normalized
+    # by _normalize), so pass 1 never over-allocates the pool
+    qcap = jnp.floor(queue_frac * cap + _EPS)                 # (Q,)
+    d_q = demand[:, None] * onehot                            # (J, Q)
+    prev_q = ((jnp.cumsum(d_q, axis=0) - d_q) * onehot).sum(-1)
+    budget = (onehot * qcap[None, :]).sum(-1)                 # (J,)
+    a1 = jnp.clip(budget - prev_q, 0.0, demand)
+    return a1 + _prefix(demand - a1, cap - a1.sum())
+
+
+def _by_class(alloc, free_c):
+    """Distribute per-job allocations over per-class free slots, fastest
+    class first: job j's slots occupy the interval
+    ``[cumsum(alloc)_{j-1}, cumsum(alloc)_j)`` of the concatenated
+    class-ordered slot space — the order the DES's free-slot picker
+    produces when it launches tasks one at a time."""
+    if free_c.shape[0] == 1:       # homogeneous: keep the lean kernel
+        return alloc[:, None]
+    off_hi = jnp.cumsum(free_c)
+    off_lo = off_hi - free_c
+    start = (jnp.cumsum(alloc) - alloc)[:, None]
+    stop = start + alloc[:, None]
+    return jnp.clip(jnp.minimum(stop, off_hi[None, :])
+                    - jnp.maximum(start, off_lo[None, :]), 0.0, None)
+
+
+def _take_rev(amount, buckets):
+    """Take ``amount[j]`` slots out of ``buckets[j, :]`` starting from the
+    LAST class (slowest) — preemption victims lose slow slots first, the
+    class-ordered analogue of the DES killing the newest launch."""
+    rev = buckets[:, ::-1]
+    cum = jnp.cumsum(rev, axis=1) - rev
+    take = jnp.clip(amount[:, None] - cum, 0.0, rev)
+    return take[:, ::-1]
 
 
 # --------------------------------------------------------------------------
@@ -99,52 +204,53 @@ def estimate_steps(scen: Mapping[str, np.ndarray], *, margin: float = 2.0
 # --------------------------------------------------------------------------
 
 
-def _allocate(demand, cap, fair, with_fair):
-    """Hand ``cap`` free slots to per-job ``demand`` under both policies.
-
-    Demands and allocations are whole slots (matching the DES's slot
-    granularity — fractional fair shares would extend wave buckets by a
-    full task duration for an epsilon of work and never converge).  Fair:
-    floor of an equal split among demanding jobs, remainder spilled in
-    arrival order (a one-pass max-min approximation; the DES is the
-    slot-exact reference).  ``with_fair`` is static: a pure-FIFO batch
-    compiles the lean prefix-only kernel (callers split rows by policy).
-    """
-    # FIFO: prefix allocation in arrival order (jobs are arrival-sorted).
-    cum = jnp.cumsum(demand) - demand
-    fifo = jnp.clip(cap - cum, 0.0, demand)
-    if not with_fair:
-        return fifo
-    # Fair: integer equal shares, leftover spilled FIFO.
-    act = demand > _EPS
-    share = jnp.floor(cap / jnp.maximum(act.sum(), 1) + _EPS)
-    a = jnp.minimum(demand, share)
-    need = demand - a
-    cum2 = jnp.cumsum(need) - need
-    a = a + jnp.clip(jnp.floor(cap - a.sum() + _EPS) - cum2, 0.0, need)
-    return jnp.where(fair > 0, a, fifo)
-
-
-def _sim_one(s: dict, n_steps: int, with_fair: bool) -> dict:
+def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
+             with_capacity: bool) -> dict:
     arrival = s["arrival"]
     n_maps = s["n_maps"]
     n_reds = s["n_reds"]
     map_cost = jnp.maximum(s["map_cost"], 1e-9)
-    red_task = s["shuffle"] + s["red_work"]
-    map_slots = s["map_slots"]
+    map_slots = s["map_slots"]          # (C,) per-class, fastest first
     red_slots = s["red_slots"]
-    fair = s["fair"]
+    speedup = jnp.maximum(s["speedup"], 1e-9)
+    policy = s["policy"]
     slowstart = s["slowstart"]
+    J = arrival.shape[0]
+    C = map_slots.shape[0]
+    cap_m = map_slots.sum()
+    cap_r = red_slots.sum()
+    # per-class task durations: compute scales with the class, network not
+    map_dur = map_cost[:, None] / speedup[None, :]            # (J, C)
+    red_dur = s["shuffle"][:, None] + s["red_work"][:, None] / speedup[None, :]
+    if with_capacity:
+        qf = s["queue_frac"]
+        onehot = (jnp.round(s["queue"])[:, None]
+                  == jnp.arange(qf.shape[0])[None, :]).astype(arrival.dtype)
+
+    def alloc_free(demand, free_c):
+        """Non-preemptive policies: hand the free slots to demand."""
+        a = _prefix(demand, free_c.sum())
+        if with_fair:
+            a = jnp.where(policy > 0.5, _waterfill(demand, free_c.sum()), a)
+        return a
+
+    def target_alloc(demand_tot, cap):
+        """Preemptive policies: the ideal allocation over TOTAL capacity."""
+        tgt = _waterfill(demand_tot, cap)
+        if with_capacity:
+            tgt = jnp.where(policy > 2.5,
+                            _capacity_fill(demand_tot, cap, onehot, qf), tgt)
+        return tgt
 
     state0 = dict(
         k=jnp.asarray(0),
         t=arrival.min(),
-        m_todo=n_maps * 1.0, m_run=jnp.zeros_like(arrival),
-        m_end=jnp.full_like(arrival, _INF),
-        r_todo=n_reds * 1.0, r_run=jnp.zeros_like(arrival),
-        r_end=jnp.full_like(arrival, _INF),
-        r_pre=jnp.zeros_like(arrival),
-        r_pre_start=jnp.full_like(arrival, _INF),
+        m_todo=n_maps * 1.0, m_run=jnp.zeros((J, C), arrival.dtype),
+        m_end=jnp.full((J, C), _INF, arrival.dtype),
+        r_todo=n_reds * 1.0, r_run=jnp.zeros((J, C), arrival.dtype),
+        r_end=jnp.full((J, C), _INF, arrival.dtype),
+        r_pre=jnp.zeros((J, C), arrival.dtype),
+        r_pre_start=jnp.full((J, C), _INF, arrival.dtype),
         red_launch=jnp.full_like(arrival, _INF),
         map_fin=jnp.full_like(arrival, _INF),
         fin=jnp.full_like(arrival, _INF),
@@ -154,7 +260,7 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool) -> dict:
         t = st["t"]
         arrived = arrival <= t + _EPS
 
-        # (a) wave buckets due now complete
+        # (a) wave buckets due now complete (per job x class)
         m_done_now = (st["m_run"] > _EPS) & (st["m_end"] <= t + _EPS)
         m_run = jnp.where(m_done_now, 0.0, st["m_run"])
         m_end = jnp.where(m_done_now, _INF, st["m_end"])
@@ -165,54 +271,98 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool) -> dict:
         r_pre, r_pre_start = st["r_pre"], st["r_pre_start"]
 
         # (b) milestones: map fleet done, slowstart crossed, job finished
-        maps_done = arrived & (m_todo <= _EPS) & (m_run <= _EPS)
+        maps_done = arrived & (m_todo <= _EPS) & (m_run.sum(-1) <= _EPS)
         just_mf = jnp.isinf(st["map_fin"]) & maps_done
         map_fin = jnp.where(just_mf, t, st["map_fin"])
 
-        done_cnt = n_maps - m_todo - m_run
+        done_cnt = n_maps - m_todo - m_run.sum(-1)
         slow_ok = arrived & (done_cnt >= slowstart * n_maps - _EPS)
         red_launch = jnp.where(jnp.isinf(st["red_launch"]) & slow_ok, t,
                                st["red_launch"])
 
         # stalled pre-map-finish reduce wave resolves (the DES rule)
-        resolve = just_mf & (r_pre > _EPS)
-        e1 = jnp.maximum(map_fin, r_pre_start + s["shuffle"]) + s["red_work"]
+        resolve = just_mf[:, None] & (r_pre > _EPS)
+        e1 = (jnp.maximum(map_fin[:, None], r_pre_start + s["shuffle"][:, None])
+              + s["red_work"][:, None] / speedup[None, :])
+        r_end = jnp.where(
+            resolve,
+            jnp.maximum(jnp.where(r_run > _EPS, r_end, -_INF), e1), r_end)
         r_run = jnp.where(resolve, r_run + r_pre, r_run)
-        r_end = jnp.where(resolve, e1, r_end)
         r_pre = jnp.where(resolve, 0.0, r_pre)
         r_pre_start = jnp.where(resolve, _INF, r_pre_start)
 
-        reds_done = (r_todo <= _EPS) & (r_run <= _EPS) & (r_pre <= _EPS)
+        reds_done = ((r_todo <= _EPS) & (r_run.sum(-1) <= _EPS)
+                     & (r_pre.sum(-1) <= _EPS))
         finished = arrived & maps_done & jnp.where(n_reds > 0, reds_done, True)
         fin = jnp.where(jnp.isinf(st["fin"]) & finished, t, st["fin"])
 
         # (c) map slots
         m_demand = jnp.where(arrived & (m_todo > _EPS), m_todo, 0.0)
-        k_m = _allocate(m_demand, map_slots - m_run.sum(), fair, with_fair)
+        if with_preempt:
+            preempt = policy > 1.5
+            target = target_alloc(m_demand + m_run.sum(-1), cap_m)
+            kill = jnp.where(preempt,
+                             jnp.clip(m_run.sum(-1) - target, 0.0, None), 0.0)
+            kill_c = _take_rev(kill, m_run)
+            m_run = m_run - kill_c
+            m_todo = m_todo + kill_c.sum(-1)     # killed work re-runs fully
+            m_end = jnp.where(m_run > _EPS, m_end, _INF)
+            m_demand = jnp.where(arrived & (m_todo > _EPS), m_todo, 0.0)
+            free_m = map_slots - m_run.sum(0)
+            alloc = jnp.where(
+                preempt,
+                jnp.clip(target - m_run.sum(-1), 0.0, m_demand),
+                alloc_free(m_demand, free_m))
+        else:
+            free_m = map_slots - m_run.sum(0)
+            alloc = alloc_free(m_demand, free_m)
+        k_m = _by_class(alloc, free_m)
         launched = k_m > _EPS
         m_end = jnp.where(
             launched,
-            jnp.maximum(jnp.where(m_run > _EPS, m_end, -_INF), t + map_cost),
+            jnp.maximum(jnp.where(m_run > _EPS, m_end, -_INF), t + map_dur),
             m_end)
         m_run = m_run + k_m
-        m_todo = m_todo - k_m
+        m_todo = m_todo - k_m.sum(-1)
 
         # (d) reduce slots (gated on slowstart; pre-map-finish waves stall)
         r_demand = jnp.where((red_launch <= t + _EPS) & (r_todo > _EPS),
                              r_todo, 0.0)
-        k_r = _allocate(r_demand, red_slots - r_run.sum() - r_pre.sum(),
-                        fair, with_fair)
+        if with_preempt:
+            run_tot = r_run.sum(-1) + r_pre.sum(-1)
+            target = target_alloc(r_demand + run_tot, cap_r)
+            kill = jnp.where(preempt, jnp.clip(run_tot - target, 0.0, None),
+                             0.0)
+            take_pre = _take_rev(kill, r_pre)      # stalled buckets first
+            r_pre = r_pre - take_pre
+            take_run = _take_rev(kill - take_pre.sum(-1), r_run)
+            r_run = r_run - take_run
+            r_todo = r_todo + (take_pre + take_run).sum(-1)
+            r_pre_start = jnp.where(r_pre > _EPS, r_pre_start, _INF)
+            r_end = jnp.where(r_run > _EPS, r_end, _INF)
+            r_demand = jnp.where((red_launch <= t + _EPS) & (r_todo > _EPS),
+                                 r_todo, 0.0)
+            free_r = red_slots - r_run.sum(0) - r_pre.sum(0)
+            alloc_r = jnp.where(
+                preempt,
+                jnp.clip(target - r_run.sum(-1) - r_pre.sum(-1), 0.0,
+                         r_demand),
+                alloc_free(r_demand, free_r))
+        else:
+            free_r = red_slots - r_run.sum(0) - r_pre.sum(0)
+            alloc_r = alloc_free(r_demand, free_r)
+        k_r = _by_class(alloc_r, free_r)
         launched_r = k_r > _EPS
-        post = launched_r & maps_done
-        pre = launched_r & ~maps_done
+        post = launched_r & maps_done[:, None]
+        pre = launched_r & ~maps_done[:, None]
         r_end = jnp.where(
             post,
-            jnp.maximum(jnp.where(r_run > _EPS, r_end, -_INF), t + red_task),
+            jnp.maximum(jnp.where(r_run > _EPS, r_end, -_INF), t + red_dur),
             r_end)
         r_run = jnp.where(post, r_run + k_r, r_run)
         r_pre = jnp.where(pre, r_pre + k_r, r_pre)
         r_pre_start = jnp.where(pre, jnp.minimum(r_pre_start, t), r_pre_start)
-        r_todo = r_todo - k_r
+        r_todo = r_todo - k_r.sum(-1)
 
         # (e) advance to the next event (freeze once none remain)
         t_next = jnp.minimum(
@@ -233,7 +383,8 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool) -> dict:
     converged = jnp.isfinite(st["fin"]).all()
     fin = st["fin"]
     latency = fin - arrival
-    busy = (n_maps * map_cost + n_reds * red_task).sum()
+    # nominal busy seconds (baseline-speed work estimate over all slots)
+    busy = (n_maps * map_cost + n_reds * (s["shuffle"] + s["red_work"])).sum()
     span = jnp.maximum(fin.max() - arrival.min(), 1e-9)
     return dict(
         finish=fin,
@@ -243,21 +394,62 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool) -> dict:
         mean_latency=latency.mean(),
         p95_latency=jnp.percentile(latency, 95.0),
         makespan=span,
-        utilization=busy / (span * jnp.maximum(map_slots + red_slots, 1.0)),
+        utilization=busy / (span * jnp.maximum(cap_m + cap_r, 1.0)),
     )
 
 
 @functools.lru_cache(maxsize=32)
-def _compiled(devs: tuple, n_steps: int, with_fair: bool):
+def _compiled(devs: tuple, n_steps: int, with_fair: bool, with_preempt: bool,
+              with_capacity: bool):
     mesh = compat.make_mesh(list(devs), axis="search")
 
     def per_device(scen):
-        return jax.vmap(lambda s: _sim_one(s, n_steps, with_fair))(scen)
+        return jax.vmap(lambda s: _sim_one(
+            s, n_steps, with_fair, with_preempt, with_capacity))(scen)
 
     return jax.jit(compat.shard_map(
         per_device, mesh=mesh, in_specs=(P("search"),),
         out_specs=P("search"), check_vma=False,
     ))
+
+
+def _normalize(scen: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Canonical scenario batch: legacy aliases resolved, class columns
+    2-D and sorted fastest-first, queue columns defaulted."""
+    arrs = {k: np.asarray(v) for k, v in scen.items()}
+    b = arrs["arrival"].shape[0]
+    if "policy" not in arrs:
+        arrs["policy"] = arrs.pop("fair") if "fair" in arrs \
+            else np.zeros(b, dtype=np.float64)
+    arrs.pop("fair", None)
+    for k in ("map_slots", "red_slots"):
+        if arrs[k].ndim == 1:
+            arrs[k] = arrs[k][:, None]
+    if "speedup" not in arrs:
+        arrs["speedup"] = np.ones_like(arrs["map_slots"])
+    elif arrs["speedup"].ndim == 1:
+        arrs["speedup"] = arrs["speedup"][:, None]
+    order = np.argsort(-arrs["speedup"], axis=1, kind="stable")
+    for k in ("speedup", "map_slots", "red_slots"):
+        arrs[k] = np.take_along_axis(arrs[k], order, axis=1)
+    if "queue" not in arrs:
+        arrs["queue"] = np.zeros_like(arrs["arrival"])
+    if "queue_frac" not in arrs:
+        # default guarantees mirror the DES: equal shares over the queues
+        # PRESENT in each row's trace (a single flat 1.0 would hand queue 0
+        # a 100% guarantee and starve the rest under the capacity policy)
+        qcol = np.round(arrs["queue"]).astype(np.int64)
+        n_q = int(qcol.max()) + 1 if qcol.size else 1
+        present = (qcol[:, :, None] == np.arange(n_q)[None, None, :]).any(1)
+        arrs["queue_frac"] = present / np.maximum(
+            present.sum(axis=1, keepdims=True), 1)
+    else:
+        # guarantees are fractions of the pool: renormalize rows that
+        # oversubscribe it so pass-1 capacity fills cannot over-allocate
+        qf = arrs["queue_frac"].astype(np.float64)
+        tot = qf.sum(axis=1, keepdims=True)
+        arrs["queue_frac"] = np.where(tot > 1.0, qf / np.maximum(tot, 1e-9), qf)
+    return arrs
 
 
 def simulate_batch(
@@ -268,17 +460,23 @@ def simulate_batch(
 ) -> dict[str, np.ndarray]:
     """Roll out a batch of scenarios; returns per-scenario metrics plus
     per-job ``finish`` / ``latency`` arrays.  The batch is padded (edge-
-    replicated) to the device count and sharded over it."""
+    replicated) to the device count and sharded over it.  Policy mix and
+    class count are static compile keys: a pure-FIFO homogeneous batch
+    compiles the same lean kernel as before the heterogeneity/preemption
+    extension (callers split rows by policy, as ``bench_cluster`` does)."""
     devs = tuple(devices) if devices is not None \
         else tuple(compat.default_search_devices())
     if n_steps is None:
         n_steps = estimate_steps(scen)
-    b = scen["arrival"].shape[0]
+    arrs = _normalize(scen)
+    b = arrs["arrival"].shape[0]
     pad = (-b) % len(devs)
-    arrs = {k: np.asarray(v) for k, v in scen.items()}
     if pad:
         arrs = {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
                 for k, v in arrs.items()}
-    with_fair = bool(np.any(arrs["fair"] > 0))
-    out = _compiled(devs, n_steps, with_fair)(arrs)
+    pol = arrs["policy"]
+    with_fair = bool(np.any(pol > 0.5))
+    with_preempt = bool(np.any(pol > 1.5))
+    with_capacity = bool(np.any(pol > 2.5))
+    out = _compiled(devs, n_steps, with_fair, with_preempt, with_capacity)(arrs)
     return {k: np.asarray(v)[:b] for k, v in out.items()}

@@ -20,6 +20,7 @@ planner without regenerating (or re-uploading) the trace.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Mapping, Sequence
 
@@ -68,6 +69,20 @@ class JobClass:
         return self.params.pNumReducers
 
 
+@functools.lru_cache(maxsize=1024)
+def _job_model_cached(params: HadoopParams, stats: ProfileStats,
+                      costs: CostFactors):
+    """One :func:`job_model` evaluation per distinct (params, stats, costs).
+
+    A workload trace repeats a handful of :class:`JobClass` templates over
+    thousands of arrivals; the parameter dataclasses are frozen (hashable),
+    so per-arrival callers (``pack_trace``, the DES's per-job setup) hit
+    this cache and a 10k-job trace costs ~one model call per class instead
+    of one per arrival.
+    """
+    return job_model(params, stats, costs)
+
+
 def task_costs(jc: JobClass, *, num_nodes: int | None = None
                ) -> tuple[float, float, float]:
     """(map task cost, reduce task cost, per-reducer shuffle seconds).
@@ -76,12 +91,13 @@ def task_costs(jc: JobClass, *, num_nodes: int | None = None
     from the §2-§4 models, plus each reducer's serialized share of the
     network transfer (Eqs. 90-91).  ``num_nodes`` is the *cluster's* node
     count — it sets the remote fraction ``(n-1)/n`` of the shuffle, which is
-    a capacity-planning knob, not a property of the job.
+    a capacity-planning knob, not a property of the job.  Memoized per
+    (class, node count) via :func:`_job_model_cached`.
     """
     p = jc.params
     if num_nodes is not None:
         p = p.replace(pNumNodes=num_nodes)
-    jm = job_model(p, jc.stats, jc.costs)
+    jm = _job_model_cached(p, jc.stats, jc.costs)
     map_cost = jm.map.ioCost + jm.map.cpuCost
     red_cost = jm.reduce.ioCost + jm.reduce.cpuCost if p.pNumReducers else 0.0
     shuffle = jm.netCost / p.pNumReducers if p.pNumReducers else 0.0
@@ -93,10 +109,11 @@ def shuffle_full(jc: JobClass) -> float:
 
     The vectorized simulator stores this node-independent constant per job
     and applies the remote fraction of each candidate cluster on device.
+    Memoized per class via :func:`_job_model_cached`.
     """
     if jc.params.pNumReducers == 0:
         return 0.0
-    jm = job_model(jc.params, jc.stats, jc.costs)
+    jm = _job_model_cached(jc.params, jc.stats, jc.costs)
     size = jm.map.intermDataSize * jc.params.pNumMappers         # Eq. 90, frac=1
     return size * jc.costs.cNetworkCost / jc.params.pNumReducers
 

@@ -258,6 +258,7 @@ def simulate_job(
                 if node != fnode:
                     continue
                 del running[uid]
+                reduce_durs.pop(uid, None)   # killed copy: drop its draws
                 copies = map_copies if kind == "map" else red_copies
                 if uid in copies.get(index, []):
                     copies[index].remove(uid)
@@ -336,6 +337,7 @@ def simulate_job(
             maybe_speculate(clock)
         else:
             red_slots[node] += 1
+            reduce_durs.pop(uid, None)
             # First copy to finish wins; kill the sibling backups.
             if index not in completed_reduces:
                 completed_reduces.add(index)
@@ -347,6 +349,7 @@ def simulate_job(
                 for sib in red_copies.get(index, []):
                     if sib != uid and sib in running:
                         k2, i2, n2, s2, e2, sp2 = running.pop(sib)
+                        reduce_durs.pop(sib, None)
                         red_slots[n2] += 1
                         res.records.append(
                             TaskRecord(k2, i2, n2, s2, clock, sp2, killed=True)
@@ -356,6 +359,13 @@ def simulate_job(
             maybe_speculate(clock)
 
         res.makespan = max(res.makespan, clock)
+
+    # drift guard for the reduce_durs bookkeeping: an entry must not outlive
+    # its running task (entries used to leak for the life of the simulation
+    # on every failure-kill and speculative-sibling kill)
+    assert set(reduce_durs) == {
+        u for u, v in running.items() if v[0] == "reduce"
+    }, "reduce_durs leaked entries for dead tasks"
 
     # --- slot-occupancy summary (consumed by the cluster layer) ---
     res.node_busy_s = [0.0] * n_nodes

@@ -26,6 +26,7 @@ from .evaluator import (
     BlockTopK,
     ChunkedEvaluator,
     Evaluator,
+    ExactCostUnavailable,
     InvalidGridError,
     SearchResult,
     apply_assignment,
@@ -50,6 +51,7 @@ from .topk import TopKAccumulator, TopKEntry, TopKResult
 from .tpu import TpuEvaluator, mesh_space, tune_tpu
 
 __all__ = [
+    "ExactCostUnavailable",
     "InvalidGridError",
     "SearchResult",
     "BlockTopK",

@@ -49,6 +49,7 @@ from repro.spec.report import VALIDITY_CONSTRAINTS
 
 __all__ = [
     "InvalidGridError",
+    "ExactCostUnavailable",
     "SearchResult",
     "BlockTopK",
     "Evaluator",
@@ -65,6 +66,17 @@ __all__ = [
 
 class InvalidGridError(ValueError):
     """Every configuration in the evaluated grid was invalid (no finite cost)."""
+
+
+class ExactCostUnavailable(ValueError):
+    """``exact_cost`` cannot produce a finite cost for this one candidate
+    (e.g. the cluster DES reports the workload never finishes there).
+
+    Raised instead of returning a silent ``inf``: direct callers get the
+    explicit failure, while the generic fallback paths (streamed top-k,
+    coordinate descent, the what-if service) catch it, log, and leave that
+    candidate at ``inf`` rather than aborting a whole completed search.
+    """
 
 
 @dataclass
@@ -163,6 +175,9 @@ class Evaluator:
         return self.evaluate(overrides)
 
     def exact_cost(self, assignment: Mapping[str, float]) -> float | None:
+        """Exact re-cost of one assignment, ``None`` when the backend has no
+        exact path.  May raise :class:`ExactCostUnavailable` for a candidate
+        whose exact cost is undefined (callers in this package catch it)."""
         return None
 
     def report(self, overrides: Mapping[str, Any]) -> CostReport | None:

@@ -55,7 +55,13 @@ from repro.runtime.batching import AdmissionQueue, LatencyStats
 from repro.spec import CostReport, PhaseBreakdown
 from repro.spec.report import invalid_reasons
 
-from .evaluator import Evaluator, InvalidGridError, SearchResult, masked_total
+from .evaluator import (
+    Evaluator,
+    ExactCostUnavailable,
+    InvalidGridError,
+    SearchResult,
+    masked_total,
+)
 from .grid import space_block, space_size
 
 __all__ = ["QueryStats", "QueryResult", "PhaseQueryResult", "WhatIfService"]
@@ -467,9 +473,14 @@ class WhatIfService:
         if q.exact_fallback and not valid.all():
             cfg = {**self._base, **q.cols}
             for i in np.flatnonzero(~valid):
-                cost = self.evaluator.exact_cost(
-                    {k: float(v[i]) for k, v in q.cols.items()}
-                )
+                try:
+                    cost = self.evaluator.exact_cost(
+                        {k: float(v[i]) for k, v in q.cols.items()}
+                    )
+                except ExactCostUnavailable as e:
+                    logger.info("exact fallback skipped query %d row %d: %s",
+                                q.qid, i, e)
+                    continue            # row stays inf, explicitly logged
                 if cost is None:
                     break               # backend has no exact path
                 logger.info(

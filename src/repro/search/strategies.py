@@ -29,6 +29,7 @@ from repro.spec.report import invalid_reason_counts
 
 from .evaluator import (
     Evaluator,
+    ExactCostUnavailable,
     InvalidGridError,
     apply_assignment,
     cached_evaluator,
@@ -187,9 +188,14 @@ def coordinate_descent_ev(
                     ", ".join(f"{n}={c}" for n, c in reasons.items())
                     or "not reported by this backend",
                 )
-                exact_costs = [
-                    evaluator.exact_cost({**assign, k: float(v)}) for v in cand
-                ]
+                exact_costs = []
+                for v in cand:
+                    try:
+                        exact_costs.append(
+                            evaluator.exact_cost({**assign, k: float(v)}))
+                    except ExactCostUnavailable as e:
+                        logger.info("exact fallback skipped %s=%s: %s", k, v, e)
+                        exact_costs.append(float("inf"))
                 if None not in exact_costs:
                     costs = np.asarray(exact_costs, dtype=np.float64)
                     swept_exact = True

@@ -19,7 +19,7 @@ from typing import Mapping
 
 import numpy as np
 
-from .evaluator import BlockTopK, Evaluator, InvalidGridError
+from .evaluator import BlockTopK, Evaluator, ExactCostUnavailable, InvalidGridError
 
 __all__ = ["TopKEntry", "TopKResult", "TopKAccumulator"]
 
@@ -141,7 +141,11 @@ class TopKAccumulator:
             survivors = []
             for c, i, a in zip(self._invalid.costs, self._invalid.gidx,
                                self._invalid.assigns):
-                exact = evaluator.exact_cost(a)
+                try:
+                    exact = evaluator.exact_cost(a)
+                except ExactCostUnavailable as e:
+                    logger.info("exact fallback skipped row %d: %s", i, e)
+                    continue            # candidate stays out of the ranking
                 if exact is None:
                     break               # evaluator has no exact path
                 survivors.append(TopKEntry(int(i), exact, a,

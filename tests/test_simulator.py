@@ -127,3 +127,16 @@ def test_slot_utilization_summary():
     assert 0.0 < r.slot_utilization <= 1.0
     # uniform tasks on a divisible cluster keep every node equally busy
     assert max(r.node_busy_s) == pytest.approx(min(r.node_busy_s), rel=1e-6)
+
+
+def test_reduce_bookkeeping_survives_noisy_failure_run():
+    """Stragglers + speculation + a failure kill reduce copies through every
+    branch (failure kill, sibling kill, stall/resume) — the in-simulator
+    reduce_durs invariant asserts no entry outlives its task, and every
+    reduce still completes exactly once."""
+    r = simulate_job(P, S, C, SimConfig(
+        seed=3, straggler_prob=0.3, task_time_jitter=0.2,
+        node_failures=((2.0, 1),)))
+    done = {rec.index for rec in r.records
+            if rec.kind == "reduce" and not rec.killed}
+    assert done == set(range(P.pNumReducers))
