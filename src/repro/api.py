@@ -47,6 +47,7 @@ __all__ = [
     "model",
     "sweep",
     "tune",
+    "calibrate",
     "serve",
 ]
 
@@ -213,7 +214,7 @@ def sweep(target=None, overrides: Mapping[str, Any] | None = None, **kw):
     return rep if rep is not None else ev.evaluate(overrides)
 
 
-_STRATEGIES = ("grid", "random", "descent", "topk")
+_STRATEGIES = ("grid", "random", "descent", "gradient", "topk")
 
 
 def tune(target=None, space: Mapping[str, Sequence[float]] | None = None, *,
@@ -222,13 +223,16 @@ def tune(target=None, space: Mapping[str, Sequence[float]] | None = None, *,
     """Search ``space`` for the cheapest configuration.
 
     ``strategy`` is ``"grid"`` (exhaustive streamed top-k=1), ``"random"``,
-    ``"descent"`` (coordinate descent) or ``"topk"`` (returns the k-best
-    ranking).  The space is validated against the backend's
-    ``param_space`` — unknown axes and out-of-domain candidates fail here,
-    before anything is evaluated.
+    ``"descent"`` (coordinate descent), ``"gradient"`` (differentiates the
+    cost model itself over a continuous relaxation of the space; falls back
+    loudly to coordinate descent on non-differentiable backends) or
+    ``"topk"`` (returns the k-best ranking).  The space is validated against
+    the backend's ``param_space`` — unknown axes and out-of-domain
+    candidates fail here, before anything is evaluated.
     """
     from repro.search.strategies import (
         coordinate_descent_ev,
+        gradient_descent_ev,
         grid_search_ev,
         random_search_ev,
         search_topk,
@@ -250,7 +254,33 @@ def tune(target=None, space: Mapping[str, Sequence[float]] | None = None, *,
     if strategy == "descent":
         return coordinate_descent_ev(ev, space, exact_fallback=exact_fallback,
                                      **skw)
+    if strategy == "gradient":
+        return gradient_descent_ev(ev, space, exact_fallback=exact_fallback,
+                                   **skw)
     return search_topk(ev, space, k=k, exact_fallback=exact_fallback, **skw)
+
+
+def calibrate(observations, params=None, **kw):
+    """Fit cost factors to observed job costs by gradient descent.
+
+    A thin alias of :func:`repro.calib.calibrate` — ``observations`` is a
+    sequence of :class:`repro.calib.Observation` (a :class:`JobSpec` plus
+    its observed cost), ``params`` the factor names to fit (defaults to all
+    :data:`repro.calib.COST_FACTOR_NAMES`).  Returns the typed
+    :class:`~repro.spec.CalibrationReport`.  Only the Hadoop closed-form
+    model is differentiable; the TPU and cluster backends raise
+    :class:`~repro.search.NotDifferentiableError` from their evaluators and
+    have no calibration path here.
+
+    >>> import repro.api as api
+    >>> from repro.calib import Observation
+    >>> obs = [Observation(spec, wall_s) for spec, wall_s in runs]
+    >>> rep = api.calibrate(obs, params=["cCpuTermMs", "cIoReadMs"])
+    >>> rep.fitted["cCpuTermMs"], rep.improvement()
+    """
+    from repro.calib import calibrate as _calibrate
+
+    return _calibrate(observations, params, **kw)
 
 
 def serve(target=None, *, keys: Sequence[str] | None = None,

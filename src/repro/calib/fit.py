@@ -1,0 +1,201 @@
+"""Gradient calibration of the paper's cost model against observed costs.
+
+The paper (§4, Table 3) obtains its cost factors from micro-benchmarks; the
+Starfish-style profiler (:mod:`repro.mapreduce.profiler`) fits them with a
+per-phase linear least squares.  Both treat the closed-form model as a
+black box.  This module uses the model *itself* as the regression function:
+because every equation in :func:`repro.core.hadoop.model.job_model_jnp` is
+branch-free JAX (with straight-through round counts and double-``where``
+guarded divisions), ``jax.grad`` of the predicted total cost w.r.t. any
+Table-2/3 parameter is exact — so a handful of observed ``(JobSpec, cost)``
+pairs suffice where sample-hungry polynomial regressions (Rizvandi et al.,
+arXiv 1303.3632 / 1203.0651) need hundreds of training runs.
+
+Parameters are optimized in an unconstrained space via the per-axis
+transforms declared on :class:`repro.spec.Axis` metadata
+(:meth:`Axis.relax` / :meth:`Axis.project`): positivity and bound
+constraints hold by construction at every optimizer step, and cost factors
+spanning 1e-9..1e-7 s/byte are fitted on a well-conditioned log scale.
+The optimizer is the in-tree AdamW (:mod:`repro.optim.adamw`) with weight
+decay pinned to zero — decay would drag physical constants toward zero.
+"""
+
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.hadoop.params import CostFactors
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.spec import CalibrationReport, JobSpec, hadoop_space
+
+__all__ = ["Observation", "calibrate", "observations_from_pairs", "COST_FACTOR_NAMES"]
+
+logger = logging.getLogger("repro.calib")
+
+#: the Table-3 names — the default fit target.
+COST_FACTOR_NAMES: tuple[str, ...] = tuple(CostFactors.__dataclass_fields__)
+
+
+@dataclass(frozen=True)
+class Observation:
+    """One observed execution: a fully-specified job and its measured cost.
+
+    ``cost`` is the observed total job cost in seconds — an engine wall
+    time (:class:`repro.mapreduce.profiler.MeasuredRun`), a simulator
+    trace total, or a replayed historical measurement.  ``weight`` scales
+    this observation's contribution to the fit loss.
+    """
+
+    spec: JobSpec
+    cost: float
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if not (self.cost > 0.0):
+            raise ValueError(
+                f"observation cost must be positive, got {self.cost!r}")
+
+
+def observations_from_pairs(
+    pairs: Iterable[tuple[JobSpec, float]]
+) -> list[Observation]:
+    """Replay adapter: ``(JobSpec, observed cost)`` pairs -> observations."""
+    return [Observation(spec=s, cost=float(c)) for s, c in pairs]
+
+
+def _stack_configs(observations: Sequence[Observation]):
+    import jax.numpy as jnp
+
+    packed = [o.spec.pack() for o in observations]
+    return {k: jnp.stack([p[k] for p in packed]) for k in packed[0]}
+
+
+def calibrate(
+    observations: Sequence[Observation],
+    params: Sequence[str] | None = None,
+    *,
+    init: Mapping[str, float] | None = None,
+    steps: int = 400,
+    peak_lr: float = 0.1,
+    grad_clip_norm: float = 10.0,
+    history_every: int = 10,
+) -> CalibrationReport:
+    """Fit the named parameters to the observed costs via ``jax.grad``.
+
+    ``params`` may name any float axis of :func:`repro.spec.hadoop_space`
+    that the packed config carries — all of ``CostFactors`` by default,
+    optionally ``ProfileStats`` fields.  Starting values come from ``init``
+    or, per parameter, from the first observation's spec.  The loss is the
+    weighted mean *squared relative error* of the model's predicted total
+    (Eq. 98) against the observed cost; rows the closed forms cannot model
+    (``valid == 0``) are weighted out rather than poisoning the fit.
+
+    Returns a :class:`repro.spec.CalibrationReport`; the fitted values are
+    in-domain by construction (axis ``project`` transforms).  The reported
+    parameters are the best seen along the trajectory, never worse on the
+    fit set than the starting point.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not observations:
+        raise ValueError("calibrate() needs at least one observation")
+    names = list(params) if params is not None else list(COST_FACTOR_NAMES)
+    if not names:
+        raise ValueError("calibrate() needs at least one parameter to fit")
+    space = hadoop_space()
+    cols = _stack_configs(observations)
+    for n in names:
+        ax = space[n]
+        if n not in cols:
+            raise KeyError(f"{n!r} is not a packed config key")
+        if ax.kind != "float":
+            raise ValueError(
+                f"axis {n!r} is {ax.kind}; only float parameters are "
+                "calibratable (int/bool knobs are search axes, not factors)")
+
+    y = jnp.asarray([o.cost for o in observations], dtype=jnp.float64)
+    w = jnp.asarray([o.weight for o in observations], dtype=jnp.float64)
+
+    init = dict(init or {})
+    start = {
+        n: float(init.get(n, observations[0].spec[n])) for n in names
+    }
+    u0 = {n: jnp.asarray(space[n].relax(start[n])) for n in names}
+
+    # Invalid rows are weighted out of the loss below; an *all*-invalid set
+    # would silently "fit" a zero loss over zero rows, so fail loudly here.
+    from repro.core.hadoop.model import job_model_jnp
+
+    valid0 = np.asarray(job_model_jnp(cols)["valid"])
+    n_valid = int(valid0.sum())
+    if n_valid == 0:
+        raise ValueError(
+            f"none of the {len(observations)} observations is valid under "
+            "the closed-form model (merge-domain constraints, see "
+            "repro.spec.invalid_reasons) — there is nothing to fit"
+        )
+    if n_valid < len(observations):
+        logger.warning(
+            "calibrate: %d of %d observations are invalid under the "
+            "closed-form model and will be weighted out of the fit",
+            len(observations) - n_valid, len(observations),
+        )
+
+    def loss_fn(u):
+        cfg = dict(cols)
+        for n in names:
+            cfg[n] = jnp.broadcast_to(space[n].project(u[n]), y.shape)
+        out = job_model_jnp(cfg)
+        rel = (out["j_totalCost"] - y) / y
+        wv = w * jax.lax.stop_gradient(out["valid"])
+        return jnp.sum(wv * rel * rel) / jnp.maximum(jnp.sum(wv), 1e-12)
+
+    opt_cfg = AdamWConfig(
+        peak_lr=peak_lr,
+        warmup_steps=max(1, steps // 20),
+        total_steps=steps,
+        weight_decay=0.0,            # decay would pull physical constants to 0
+        grad_clip_norm=grad_clip_norm,
+    )
+    state = adamw_init(u0)
+
+    @jax.jit
+    def step(u, state):
+        loss, grads = jax.value_and_grad(loss_fn)(u)
+        new_u, new_state, _ = adamw_update(grads, state, u, opt_cfg)
+        return loss, new_u, new_state
+
+    u = u0
+    initial_loss = float(loss_fn(u0))
+    best_loss, best_u = initial_loss, u0
+    history: list[float] = [initial_loss]
+    for i in range(steps):
+        # `loss` is evaluated at the pre-update params `u` of this step
+        loss, new_u, state = step(u, state)
+        fl = float(loss)
+        if np.isfinite(fl) and fl < best_loss:
+            best_loss, best_u = fl, u
+        u = new_u
+        if (i + 1) % max(1, history_every) == 0:
+            history.append(fl)
+    final_loss = float(loss_fn(u))
+    if np.isfinite(final_loss) and final_loss < best_loss:
+        best_loss, best_u = final_loss, u
+
+    fitted = {n: float(space[n].project(best_u[n])) for n in names}
+    report = CalibrationReport(
+        fitted=fitted,
+        initial=start,
+        loss=best_loss,
+        initial_loss=initial_loss,
+        steps=steps,
+        n_observations=len(observations),
+        loss_history=tuple(history),
+    )
+    logger.info("calibrate: %s", report.summary())
+    return report

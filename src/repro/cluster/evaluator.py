@@ -252,6 +252,16 @@ class ClusterEvaluator(Evaluator):
         """Declared cluster axes — the single source of the knob mask."""
         return cluster_space()
 
+    def grad_objective(self):
+        from repro.search.evaluator import NotDifferentiableError
+
+        raise NotDifferentiableError(
+            "cluster costs come from the discrete-event scheduler simulation "
+            "(wave counts, preemption, arrival ordering) — piecewise-constant "
+            "in every knob, so there is no useful gradient; gradient "
+            "strategies fall back to coordinate descent here"
+        )
+
     def evaluate(self, overrides: Mapping[str, Any]) -> SearchResult:
         batched, static, n = split_overrides(self.base_cfg, overrides)
         out_blocks: dict[str, list[np.ndarray]] = {}

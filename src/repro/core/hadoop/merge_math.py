@@ -29,10 +29,63 @@ __all__ = [
     "calc_num_spills_interm_merge",
     "calc_num_spills_final_merge",
     "num_merge_passes",
+    "ste_floor",
+    "ste_ceil",
+    "ste_round",
     "MergePlan",
     "simulate_merge",
     "merge_plan",
 ]
+
+
+# --------------------------------------------------------------------------
+# straight-through rounding (shared by the batched model and calibration)
+# --------------------------------------------------------------------------
+#
+# The spill/merge round counts (Eqs. 15, 20-26, 31-32 and the reduce-side
+# Eqs. 46-53 neighborhood) are floor/ceil expressions.  ``jnp.floor`` /
+# ``jnp.ceil`` have an exactly-zero derivative, so any gradient taken
+# through the job model w.r.t. the knobs behind them (pSortMB, pSpillPerc,
+# pSortFactor, selectivities, ...) silently dies there — calibration and
+# gradient search would see flat objectives.  These helpers keep the
+# FORWARD VALUES BIT-FOR-BIT IDENTICAL to jnp.floor/jnp.ceil/jnp.round
+# (``x - stop_gradient(x)`` is exactly 0.0 for every finite x, so the sum
+# is exactly the rounded value; non-finite x routes through the double-
+# ``where`` so ``inf`` stays ``inf`` instead of becoming ``inf - inf``)
+# while letting the cotangent pass through unchanged for finite inputs
+# (the straight-through estimator: d/dx = 1).
+
+
+def _ste(rounded, x):
+    import jax
+    import jax.numpy as jnp
+
+    finite = jnp.isfinite(x)
+    # double-where: the subtraction only ever sees finite values, so neither
+    # the forward pass nor the cotangent can manufacture inf - inf = nan.
+    x_safe = jnp.where(finite, x, 0.0)
+    return rounded + jnp.where(finite, x_safe - jax.lax.stop_gradient(x_safe), 0.0)
+
+
+def ste_floor(x):
+    """``jnp.floor(x)`` forward, identity gradient (straight-through)."""
+    import jax.numpy as jnp
+
+    return _ste(jnp.floor(x), x)
+
+
+def ste_ceil(x):
+    """``jnp.ceil(x)`` forward, identity gradient (straight-through)."""
+    import jax.numpy as jnp
+
+    return _ste(jnp.ceil(x), x)
+
+
+def ste_round(x):
+    """``jnp.round(x)`` forward, identity gradient (straight-through)."""
+    import jax.numpy as jnp
+
+    return _ste(jnp.round(x), x)
 
 
 def calc_num_spills_first_pass(n: int, f: int) -> int:

@@ -22,6 +22,13 @@ exact simulation instead).  The three underlying constraints are also
 emitted separately (``m_mergeValid``, ``r_step2Valid``, ``r_step3Valid``)
 so the typed layer can say *which* one failed.
 
+Gradients: every spill/merge round count goes through the straight-through
+helpers (:func:`repro.core.hadoop.merge_math.ste_floor` / ``ste_ceil``) —
+forward values are bit-for-bit ``jnp.floor``/``jnp.ceil``, but the cotangent
+passes through, so ``jax.grad`` of any output w.r.t. the Table-1/2/3 inputs
+is non-degenerate.  This is what :mod:`repro.calib` (cost-factor
+calibration) and the ``gradient_descent_ev`` search strategy differentiate.
+
 The typed view of this module lives in :mod:`repro.spec`:
 :meth:`repro.spec.JobSpec.pack` produces the input dict (it IS
 :func:`pack_config`), and :meth:`repro.spec.CostReport.from_outputs` lifts
@@ -34,6 +41,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .merge_math import ste_ceil, ste_floor
 from .params import MiB, CostFactors, HadoopParams, ProfileStats
 
 __all__ = ["pack_config", "job_model_jnp", "CONFIG_KEYS"]
@@ -96,20 +104,20 @@ def _first_pass(n, f):
 def _interm_merge(n, f):
     """Eq. 21, branch-free (valid for n <= f**2)."""
     p = _first_pass(n, f)
-    return jnp.where(n <= f, 0.0, p + jnp.floor((n - p) / f) * f)
+    return jnp.where(n <= f, 0.0, p + ste_floor((n - p) / f) * f)
 
 
 def _final_merge(n, f):
     """Eq. 22, branch-free (valid for n <= f**2)."""
     p = _first_pass(n, f)
     s = _interm_merge(n, f)
-    return jnp.where(n <= f, n, 1.0 + jnp.floor((n - p) / f) + (n - s))
+    return jnp.where(n <= f, n, 1.0 + ste_floor((n - p) / f) + (n - s))
 
 
 def _num_passes(n, f):
     """Eq. 25, branch-free (valid for n <= f**2)."""
     p = _first_pass(n, f)
-    many = 2.0 + jnp.floor((n - p) / f)
+    many = 2.0 + ste_floor((n - p) / f)
     return jnp.where(n <= 1.0, 0.0, jnp.where(n <= f, 1.0, many))
 
 
@@ -141,11 +149,17 @@ def _map_model(cfg: dict) -> dict:
     cpu_mapwrite = o["outMapSize"] * cfg["cOutComprCPUCost"]
 
     # Collect/Spill (Eqs. 11-19).
-    o["maxSerPairs"] = jnp.floor(
-        cfg["pSortMB"] * MiB * (1.0 - cfg["pSortRecPerc"]) * cfg["pSpillPerc"]
-        / o["outPairWidth"]
+    # Double-where guard: at degenerate profiles (sMapSizeSel -> 0) the pair
+    # width is 0 and this division is +inf.  The forward value is unchanged
+    # (the outer where selects inf there, exactly what num/0 produces), but
+    # the inner where keeps the division's local derivative finite so the
+    # masked-out cotangent stays 0 instead of 0 * inf = nan.
+    w_ok = o["outPairWidth"] > 0.0
+    ser_num = cfg["pSortMB"] * MiB * (1.0 - cfg["pSortRecPerc"]) * cfg["pSpillPerc"]
+    o["maxSerPairs"] = ste_floor(
+        jnp.where(w_ok, ser_num / jnp.where(w_ok, o["outPairWidth"], 1.0), jnp.inf)
     )
-    o["maxAccPairs"] = jnp.floor(
+    o["maxAccPairs"] = ste_floor(
         cfg["pSortMB"] * MiB * cfg["pSortRecPerc"] * cfg["pSpillPerc"] / 16.0
     )
     o["spillBufferPairs"] = jnp.maximum(
@@ -153,7 +167,7 @@ def _map_model(cfg: dict) -> dict:
         jnp.minimum(jnp.minimum(o["maxSerPairs"], o["maxAccPairs"]), o["outMapPairs"]),
     )                                                                      # Eq. 13
     o["spillBufferSize"] = o["spillBufferPairs"] * o["outPairWidth"]       # Eq. 14
-    o["numSpills"] = jnp.ceil(o["outMapPairs"] / o["spillBufferPairs"])    # Eq. 15
+    o["numSpills"] = ste_ceil(o["outMapPairs"] / o["spillBufferPairs"])    # Eq. 15
     o["spillFilePairs"] = o["spillBufferPairs"] * cfg["sCombinePairsSel"]  # Eq. 16
     o["spillFileSize"] = (
         o["spillBufferSize"] * cfg["sCombineSizeSel"] * cfg["sIntermCompressRatio"]
@@ -270,11 +284,11 @@ def _reduce_model(cfg: dict, m: dict) -> dict:
 
     # Case 1 (Eqs. 42-47)
     nseg_raw = o["mergeSizeThr"] / jnp.maximum(o["segmentUncomprSize"], 1e-30)
-    nseg_c = jnp.ceil(nseg_raw)
+    nseg_c = ste_ceil(nseg_raw)
     nseg1 = jnp.where(
         nseg_c * o["segmentUncomprSize"] <= o["shuffleBufferSize"],
         nseg_c,
-        jnp.floor(nseg_raw),
+        ste_floor(nseg_raw),
     )
     nseg1 = jnp.maximum(1.0, jnp.minimum(nseg1, cfg["pInMemMergeThr"]))
 
@@ -288,9 +302,9 @@ def _reduce_model(cfg: dict, m: dict) -> dict:
         in_mem, nseg * o["segmentPairs"] * cfg["sCombinePairsSel"],
         o["segmentPairs"],
     )
-    o["numShuffleFiles"] = jnp.where(in_mem, jnp.floor(M / nseg), M)       # Eq. 46/51
+    o["numShuffleFiles"] = jnp.where(in_mem, ste_floor(M / nseg), M)       # Eq. 46/51
     o["numSegmentsInMem"] = jnp.where(                                     # Eq. 47/52
-        in_mem, M - nseg * jnp.floor(M / nseg), 0.0
+        in_mem, M - nseg * ste_floor(M / nseg), 0.0
     )
 
     # Disk merges during shuffle (Eqs. 53-59).
@@ -298,7 +312,7 @@ def _reduce_model(cfg: dict, m: dict) -> dict:
     o["numShuffleMerges"] = jnp.where(                                     # Eq. 53
         nsf < 2.0 * F - 1.0,
         0.0,
-        jnp.floor((nsf - 2.0 * F + 1.0) / F) + 1.0,
+        ste_floor((nsf - 2.0 * F + 1.0) / F) + 1.0,
     )
     o["numMergShufFiles"] = o["numShuffleMerges"]                          # Eq. 54
     o["mergShufFileSize"] = F * o["shuffleFileSize"]                       # Eq. 55
@@ -333,7 +347,7 @@ def _reduce_model(cfg: dict, m: dict) -> dict:
     o["currSegmentBuffer"] = o["numSegmentsInMem"] * o["segmentUncomprSize"]
     o["numSegmentsEvicted"] = jnp.where(                                   # Eq. 64
         o["currSegmentBuffer"] > o["maxSegmentBuffer"],
-        jnp.ceil(
+        ste_ceil(
             (o["currSegmentBuffer"] - o["maxSegmentBuffer"])
             / jnp.maximum(o["segmentUncomprSize"], 1e-30)
         ),

@@ -9,8 +9,10 @@ configurations.  This package is the platform for that at production scale:
   model evaluation (one XLA compile per key-set; bit-for-bit equal to the
   unchunked path) + the ``valid == 0`` -> exact-simulator escape hatch.
 * :mod:`~repro.search.topk`       — streaming on-device top-k merging.
-* :mod:`~repro.search.strategies` — grid / random / coordinate-descent
-  search over any evaluator.
+* :mod:`~repro.search.strategies` — grid / random / coordinate-descent /
+  gradient-descent search over any evaluator (gradient descent relaxes the
+  space continuously and differentiates the model itself, falling back
+  loudly on non-differentiable backends).
 * :mod:`~repro.search.service`    — async what-if query service: concurrent
   probes/sweeps/grids coalesced into shared evaluator chunks (continuous
   batching over row slots, per-query futures + latency stats).
@@ -28,6 +30,7 @@ from .evaluator import (
     Evaluator,
     ExactCostUnavailable,
     InvalidGridError,
+    NotDifferentiableError,
     SearchResult,
     apply_assignment,
     cached_evaluator,
@@ -41,6 +44,7 @@ from .strategies import (
     TuningResult,
     coordinate_descent,
     coordinate_descent_ev,
+    gradient_descent_ev,
     grid_search,
     grid_search_ev,
     random_search,
@@ -53,6 +57,7 @@ from .tpu import TpuEvaluator, mesh_space, tune_tpu
 __all__ = [
     "ExactCostUnavailable",
     "InvalidGridError",
+    "NotDifferentiableError",
     "SearchResult",
     "BlockTopK",
     "Evaluator",
@@ -78,6 +83,7 @@ __all__ = [
     "random_search_ev",
     "coordinate_descent",
     "coordinate_descent_ev",
+    "gradient_descent_ev",
     "WhatIfService",
     "QueryResult",
     "QueryStats",

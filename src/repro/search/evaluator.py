@@ -50,6 +50,7 @@ from repro.spec.report import VALIDITY_CONSTRAINTS
 __all__ = [
     "InvalidGridError",
     "ExactCostUnavailable",
+    "NotDifferentiableError",
     "SearchResult",
     "BlockTopK",
     "Evaluator",
@@ -66,6 +67,16 @@ __all__ = [
 
 class InvalidGridError(ValueError):
     """Every configuration in the evaluated grid was invalid (no finite cost)."""
+
+
+class NotDifferentiableError(TypeError):
+    """This backend's cost is not a differentiable function of its knobs.
+
+    Raised by :meth:`Evaluator.grad_objective` on backends whose cost comes
+    from a simulation or table lookup (the cluster DES, the numpy TPU step
+    model).  Gradient-based strategies catch it and fall back — loudly — to
+    a zeroth-order strategy.
+    """
 
 
 class ExactCostUnavailable(ValueError):
@@ -134,6 +145,16 @@ def masked_total(outputs: Mapping[str, Any], cost_key: str, xp=np):
 
     Shared by :class:`ChunkedEvaluator`, the cluster planner and the what-if
     service so the invalid-row convention cannot drift between backends.
+
+    Gradient safety: this ``where`` zeroes the cotangent of masked rows, but
+    a zero cotangent times an infinite *local* derivative upstream is still
+    NaN (the classic where/inf bug).  The fix lives at the producers — the
+    dangerous divisions in ``core/hadoop/model.py`` are double-``where``
+    guarded and round counts use the straight-through helpers — so
+    ``jax.grad`` of this masked total is finite even on invalid configs
+    (regression-tested in ``tests/test_gradients.py``).  ``sanitize_costs``
+    and ``topk.py`` run host-side on already-materialized numpy values and
+    carry no gradients, so they need no such guard.
     """
     return xp.where(outputs["valid"] > 0, outputs[cost_key], xp.inf)
 
@@ -190,6 +211,21 @@ class Evaluator:
         """Declarative description of this backend's searchable axes
         (:class:`repro.spec.ParamSpace`), or ``None`` if undeclared."""
         return None
+
+    def grad_objective(self):
+        """Differentiable single-config objective, for gradient strategies.
+
+        Returns ``fn({key: jnp scalar}) -> (cost, valid)`` where ``cost`` is
+        the *raw* (unmasked) model cost — differentiable w.r.t. every float
+        override — and ``valid`` the model's validity flag (0/1, no useful
+        gradient).  Backends whose cost is not a differentiable function of
+        the knobs raise :class:`NotDifferentiableError` instead; callers
+        must catch it and fall back loudly.
+        """
+        raise NotDifferentiableError(
+            f"{type(self).__name__} does not expose a differentiable "
+            "objective; use a zeroth-order strategy (grid/random/descent)"
+        )
 
     def chunk_topk(self, overrides: Mapping[str, np.ndarray], k: int) -> "BlockTopK":
         """Top-k of one block: the k cheapest valid configs and the k
@@ -470,6 +506,21 @@ class ChunkedEvaluator(Evaluator):
             np.asarray(inv_c), np.asarray(inv_i), int(n_valid),
             {name: int(v) for name, v in reasons.items() if int(v)},
         )
+
+    def grad_objective(self):
+        """The job model as a differentiable objective: the branch-free
+        equations with straight-through round counts, evaluated on one
+        config (base + scalar overrides).  Same ``model_fn`` as the chunked
+        path, so the value at any point agrees with :meth:`evaluate`."""
+        base = self.base_cfg
+        model_fn = self._model_fn
+        cost_key = self.cost_key
+
+        def objective(overrides: Mapping[str, Any]):
+            out = model_fn({**base, **overrides})
+            return out[cost_key], out["valid"]
+
+        return objective
 
     def exact_cost(self, assignment: Mapping[str, float]) -> float:
         """Escape hatch for ``valid == 0``: exact task-scheduler simulation

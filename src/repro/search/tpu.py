@@ -73,6 +73,16 @@ class TpuEvaluator(Evaluator):
         of the paper's merge-domain validity, made inspectable."""
         return self._space
 
+    def grad_objective(self):
+        from .evaluator import NotDifferentiableError
+
+        raise NotDifferentiableError(
+            "the TPU step model is a pure-numpy table model over integer "
+            "mesh layouts (dp/tp/n_micro are divisor-constrained ints) — "
+            "there is no differentiable relaxation; gradient strategies "
+            "fall back to coordinate descent here"
+        )
+
     def _build_space(self) -> ParamSpace:
         gb = self.shape.global_batch
         preds = []

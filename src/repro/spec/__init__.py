@@ -31,6 +31,7 @@ from .job import JobSpec
 from .report import (
     PHASES,
     VALIDITY_CONSTRAINTS,
+    CalibrationReport,
     CostReport,
     PhaseBreakdown,
     invalid_reason_counts,
@@ -45,6 +46,7 @@ __all__ = [
     "JobSpec",
     "PhaseBreakdown",
     "CostReport",
+    "CalibrationReport",
     "PHASES",
     "VALIDITY_CONSTRAINTS",
     "invalid_reason_counts",

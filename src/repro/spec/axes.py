@@ -96,6 +96,66 @@ class Axis:
             ok &= v <= self.upper
         return ok
 
+    # ---------------- continuous relaxation ----------------
+
+    def _relax_bounds(self) -> tuple[float | None, float | None]:
+        # Boolean axes carry no declared bounds; their relaxation lives on
+        # (0, 1) and rounds straight-through back to {0, 1}.
+        if self.kind == "bool":
+            return 0.0, 1.0
+        lo = None if self.lower is None else float(self.lower)
+        hi = None if self.upper is None else float(self.upper)
+        return lo, hi
+
+    def relax(self, value) -> np.ndarray:
+        """Physical value -> unconstrained real (host-side, numpy).
+
+        Inverse of :meth:`project` up to rounding: two-sided bounds use the
+        logit, one-sided bounds the log offset (well-conditioned for cost
+        factors spanning 1e-9..1e-7), unbounded axes the identity.  Values
+        at a closed bound are nudged into the interior so the inverse stays
+        finite.
+        """
+        v = np.asarray(value, dtype=np.float64)
+        lo, hi = self._relax_bounds()
+        if lo is not None and hi is not None:
+            frac = np.clip((v - lo) / (hi - lo), 1e-9, 1.0 - 1e-9)
+            return np.log(frac) - np.log1p(-frac)
+        if lo is not None:
+            return np.log(np.maximum(v - lo, 1e-30))
+        if hi is not None:
+            return np.log(np.maximum(hi - v, 1e-30))
+        return v
+
+    def project(self, u):
+        """Unconstrained real -> differentiable in-domain value (device-side).
+
+        The forward map of the relaxation: sigmoid for two-sided bounds,
+        ``bound +/- exp(u)`` for one-sided, identity when unbounded.
+        ``int``/``bool`` axes additionally round straight-through
+        (:func:`repro.core.hadoop.merge_math.ste_round`): the forward value
+        is an exact integer while the gradient treats the axis as
+        continuous.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.hadoop.merge_math import ste_round
+
+        u = jnp.asarray(u)
+        lo, hi = self._relax_bounds()
+        if lo is not None and hi is not None:
+            v = lo + (hi - lo) * jax.nn.sigmoid(u)
+        elif lo is not None:
+            v = lo + jnp.exp(u)
+        elif hi is not None:
+            v = hi - jnp.exp(u)
+        else:
+            v = u
+        if self.kind in ("int", "bool"):
+            v = ste_round(v)
+        return v
+
     def check_values(self, values: Sequence[float]) -> None:
         """Raise ``ValueError`` on candidate values outside the axis domain."""
         v = np.asarray(list(values), dtype=np.float64)

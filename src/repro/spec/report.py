@@ -37,6 +37,7 @@ import numpy as np
 __all__ = [
     "PhaseBreakdown",
     "CostReport",
+    "CalibrationReport",
     "PHASES",
     "VALIDITY_CONSTRAINTS",
     "invalid_reason_counts",
@@ -232,6 +233,59 @@ class CostReport:
                 + "; ".join(self.invalid_reasons())
             )
         return int(np.argmin(cost))
+
+
+@dataclass(frozen=True)
+class CalibrationReport:
+    """Result of one gradient-calibration run (:mod:`repro.calib`).
+
+    The calibration counterpart of :class:`CostReport`: where a cost report
+    decomposes one model *evaluation*, a calibration report decomposes one
+    model *fit* — which parameters moved, from where to where, and how much
+    of the observation error the fit removed.  Host-side values (plain
+    floats), not a pytree: a report is what a fit returns, not what flows
+    through jit.
+    """
+
+    fitted: dict[str, float]          # parameter name -> fitted value
+    initial: dict[str, float]         # parameter name -> starting value
+    loss: float                       # final loss (mean squared rel. error)
+    initial_loss: float               # loss at the starting point
+    steps: int                        # optimizer steps taken
+    n_observations: int               # (JobSpec, cost) pairs fitted against
+    loss_history: tuple[float, ...] = ()   # sampled loss trace
+
+    @property
+    def param_names(self) -> tuple[str, ...]:
+        return tuple(self.fitted)
+
+    def improvement(self) -> float:
+        """Fraction of the initial loss removed by the fit (0..1)."""
+        if self.initial_loss <= 0.0:
+            return 0.0
+        return 1.0 - self.loss / self.initial_loss
+
+    def delta(self, name: str) -> float:
+        """Relative movement of one parameter from its starting value."""
+        init = self.initial[name]
+        if init == 0.0:
+            return float("inf") if self.fitted[name] != 0.0 else 0.0
+        return self.fitted[name] / init - 1.0
+
+    def summary(self, top: int = 5) -> str:
+        """A short human-readable fit digest (for logs and benchmarks)."""
+        moved = sorted(
+            self.fitted, key=lambda k: abs(self.delta(k)), reverse=True)
+        lines = [
+            f"calibrated {len(self.fitted)} parameter(s) over "
+            f"{self.n_observations} observation(s) in {self.steps} steps: "
+            f"loss {self.initial_loss:.3e} -> {self.loss:.3e} "
+            f"({100.0 * self.improvement():.1f}% improvement)"
+        ]
+        for k in moved[:top]:
+            lines.append(
+                f"  {k}: {self.initial[k]:.4g} -> {self.fitted[k]:.4g}")
+        return "\n".join(lines)
 
 
 def invalid_reason_counts(

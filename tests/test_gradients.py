@@ -1,0 +1,203 @@
+"""Gradient-safety regression tests for the differentiable model stack.
+
+Two hazards are pinned down here:
+
+* **Straight-through rounding** (``merge_math.ste_floor``/``ste_ceil``/
+  ``ste_round``): forward values must be bit-for-bit identical to
+  ``jnp.floor``/``ceil``/``round`` — including at ``inf``, where a naive
+  ``x - stop_gradient(x)`` formulation produces ``inf - inf = nan`` — while
+  the gradient passes through as identity for finite inputs.
+
+* **The where/inf cotangent bug**: ``jnp.where(valid, cost, inf)`` masking
+  produces an exactly-zero cotangent for masked rows, but upstream VJPs
+  multiply that zero by local derivatives; a ``0 * inf`` anywhere in the
+  chain poisons the whole gradient with NaN.  The model applies the
+  double-``where`` trick at the dangerous divisions (Eq. 11 pair-width
+  division in particular) so gradients of the *masked* total stay finite
+  even on invalid or degenerate configurations.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cluster.workload import default_job_classes
+from repro.core.hadoop.merge_math import ste_ceil, ste_floor, ste_round
+from repro.core.hadoop.model import CONFIG_KEYS, job_model_jnp, pack_config
+from repro.core.hadoop.params import CostFactors
+from repro.spec import hadoop_space
+
+PROFILES = default_job_classes()
+
+
+def _base_cfg(jc):
+    return pack_config(jc.params, jc.stats, jc.costs)
+
+
+def _masked_total(cfg):
+    out = job_model_jnp(cfg)
+    return jnp.where(out["valid"] > 0, out["j_totalCost"], jnp.inf)
+
+
+def _grad_masked(cfg, **overrides):
+    cfg = dict(cfg)
+    for k, v in overrides.items():
+        cfg[k] = jnp.asarray(v, dtype=jnp.float64)
+    out = job_model_jnp(cfg)
+    grads = jax.grad(lambda c: _masked_total(c))(cfg)
+    return out, grads
+
+
+def _nonfinite(grads):
+    return sorted(k for k, v in grads.items() if not bool(jnp.isfinite(v).all()))
+
+
+# --------------------------------------------------------------------------
+# straight-through rounding helpers
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "ste_fn,ref_fn",
+    [(ste_floor, jnp.floor), (ste_ceil, jnp.ceil), (ste_round, jnp.round)],
+    ids=["floor", "ceil", "round"],
+)
+def test_ste_forward_bit_exact(ste_fn, ref_fn):
+    xs = jnp.asarray(
+        [
+            0.0, -0.0, 0.5, -0.5, 1.0 + 2 ** -52, 25.05350053888,
+            1e15 + 0.4999, -3.75, 2.5, 3.5, 1e-300, 7e12,
+            jnp.inf, -jnp.inf,
+        ],
+        dtype=jnp.float64,
+    )
+    got = ste_fn(xs)
+    want = ref_fn(xs)
+    # bit-for-bit: nan-free and exactly equal, inf included
+    assert bool(jnp.array_equal(got, want)), (got, want)
+
+
+@pytest.mark.parametrize(
+    "ste_fn", [ste_floor, ste_ceil, ste_round], ids=["floor", "ceil", "round"]
+)
+def test_ste_gradient_identity_for_finite_inputs(ste_fn):
+    for x in (0.25, 3.0, -7.6, 1e9 + 0.3):
+        g = jax.grad(lambda v: ste_fn(v))(jnp.asarray(x, dtype=jnp.float64))
+        assert float(g) == 1.0, (ste_fn.__name__, x, float(g))
+
+
+@pytest.mark.parametrize(
+    "ste_fn", [ste_floor, ste_ceil, ste_round], ids=["floor", "ceil", "round"]
+)
+def test_ste_gradient_finite_at_inf(ste_fn):
+    # At non-finite inputs the naive x - stop_gradient(x) form evaluates
+    # inf - inf = nan in both the forward value and the cotangent; the
+    # double-where form must give a zero (finite) gradient instead.
+    g = jax.grad(ste_fn)(jnp.asarray(jnp.inf, dtype=jnp.float64))
+    assert bool(jnp.isfinite(g)), float(g)
+
+
+# --------------------------------------------------------------------------
+# masked-total gradients on invalid / degenerate configs
+# --------------------------------------------------------------------------
+
+
+def test_masked_total_grad_finite_on_invalid_config():
+    # pSortMB=0.25 with F=2 drives numSpills far beyond F**2 -> valid == 0,
+    # so the masked total is inf; its gradient must still be finite.
+    out, grads = _grad_masked(_base_cfg(PROFILES[0]), pSortMB=0.25, pSortFactor=2.0)
+    assert float(out["valid"]) == 0.0
+    assert _nonfinite(grads) == []
+
+
+def test_masked_total_grad_finite_on_degenerate_profile():
+    # sMapSizeSel=0 zeroes the map output size, making the Eq. 10 pair width
+    # 0 and the Eq. 11 division +inf — the exact site of the 0*inf cotangent
+    # hazard guarded by the double-where.
+    out, grads = _grad_masked(_base_cfg(PROFILES[0]), sMapSizeSel=0.0)
+    assert bool(jnp.isfinite(out["j_totalCost"]))
+    assert _nonfinite(grads) == []
+
+
+def test_masked_total_grad_finite_under_vmap_with_degenerate_row():
+    # One poisoned row must not produce NaN in its own gradient row (vmapped
+    # grads of other rows were never affected; the masked row itself was).
+    base = _base_cfg(PROFILES[0])
+    cfgs = {k: jnp.stack([jnp.asarray(base[k], dtype=jnp.float64)] * 3) for k in base}
+    cfgs["sMapSizeSel"] = jnp.asarray([1.0, 0.5, 0.0], dtype=jnp.float64)
+    grads = jax.vmap(jax.grad(_masked_total))(cfgs)
+    assert _nonfinite(grads) == []
+
+
+# --------------------------------------------------------------------------
+# property test: grads finite across every profile, cost factor, float axis
+# --------------------------------------------------------------------------
+
+
+def _float_axis_names():
+    packed = set(CONFIG_KEYS)
+    return [
+        ax.name
+        for ax in hadoop_space().axes
+        if ax.kind == "float" and ax.name in packed
+    ]
+
+
+COST_FIELDS = list(CostFactors.__dataclass_fields__)
+
+
+@pytest.mark.parametrize("jc", PROFILES, ids=[jc.name for jc in PROFILES])
+def test_grad_finite_wrt_cost_factors_and_float_axes(jc):
+    """jax.grad of j_totalCost w.r.t. every CostFactors field and every float
+    Axis is finite and non-NaN at each mapreduce.JOBS profile."""
+    cfg = _base_cfg(jc)
+    wanted = set(COST_FIELDS) | set(_float_axis_names())
+
+    def total(c):
+        return job_model_jnp(c)["j_totalCost"]
+
+    grads = jax.grad(total)(dict(cfg))
+    bad = [k for k in sorted(wanted) if not bool(jnp.isfinite(grads[k]).all())]
+    assert bad == [], f"{jc.name}: non-finite grads for {bad}"
+
+
+def test_grad_finite_wrt_cost_factors_property():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    space = hadoop_space()
+    # Knobs whose in-range perturbation should never break differentiability.
+    knobs = {
+        "pSortMB": (8.0, 512.0),
+        "pSpillPerc": (0.05, 0.99),
+        "pSortRecPerc": (0.01, 0.5),
+        "pSortFactor": (2, 128),
+        "pNumReducers": (1, 512),
+        "sMapSizeSel": (1e-3, 4.0),
+        "sMapPairsSel": (1e-3, 4.0),
+        "sIntermCompressRatio": (0.1, 1.0),
+    }
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        idx=st.integers(min_value=0, max_value=len(PROFILES) - 1),
+        draws=st.fixed_dictionaries(
+            {
+                k: st.floats(min_value=lo, max_value=hi, allow_nan=False)
+                if space[k].kind == "float"
+                else st.integers(min_value=lo, max_value=hi)
+                for k, (lo, hi) in knobs.items()
+            }
+        ),
+    )
+    def check(idx, draws):
+        cfg = dict(_base_cfg(PROFILES[idx]))
+        for k, v in draws.items():
+            cfg[k] = jnp.asarray(float(v), dtype=jnp.float64)
+        grads = jax.grad(lambda c: _masked_total(c))(cfg)
+        wanted = set(COST_FIELDS) | set(_float_axis_names())
+        bad = [k for k in sorted(wanted) if not bool(jnp.isfinite(grads[k]).all())]
+        assert bad == [], f"profile={PROFILES[idx].name} draws={draws} bad={bad}"
+
+    check()
