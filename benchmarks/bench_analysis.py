@@ -1,0 +1,76 @@
+"""Static-analysis gate — ``repro.analysis`` over every registered model.
+
+Two claims, asserted rather than eyeballed:
+
+1. **Liveness** — every checker fires on its known-bad fixture (a dead
+   checker is indistinguishable from a clean tree otherwise).
+2. **Cleanliness** — the registered models (Hadoop job model + its grad
+   path, the calibration loss, the tuner objective, the cluster rollout,
+   the Pallas launches) produce no findings beyond ``analysis_baseline.json``,
+   and the interval interpreter has a transfer function for every primitive
+   they use (no silent coverage gaps).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_analysis [--smoke] [--quick]
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from .common import timer
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run(quick: bool = False) -> list[str]:
+    from repro.analysis import DEFAULT_BASELINE, load_baseline, run_all
+    from repro.analysis.fixtures import selftest
+
+    lines: list[str] = []
+
+    with timer() as t_fix:
+        fixture_hits = selftest()
+    dead = [n for n, fs in fixture_hits.items() if not fs]
+    assert not dead, f"checkers no longer fire on their fixtures: {dead}"
+    lines.append(
+        "fixture self-test: "
+        + ", ".join(f"{n}={len(fs)}" for n, fs in sorted(fixture_hits.items()))
+        + f"  [{t_fix.s:.1f}s]")
+
+    if quick:
+        lines.append("quick mode: skipping the full model sweep "
+                     "(fixture liveness only)")
+        return lines
+
+    with timer() as t_all:
+        report = run_all()
+    baseline = load_baseline(str(ROOT / DEFAULT_BASELINE))
+    new = report.new_findings(baseline)
+    assert not new, (
+        "non-baselined findings on registered models: "
+        + "; ".join(f"{f.checker}/{f.kind}@{f.target}" for f in new))
+    assert not report.coverage_gaps, (
+        f"unmodeled primitives: {report.coverage_gaps}")
+    lines.append(
+        f"full sweep: {len(report.checkers_run)} checkers, "
+        f"{len(report.findings)} finding(s) "
+        f"({len(new)} new, {len(baseline)} baselined), "
+        f"{len(report.skipped)} target(s) skipped-with-reason  "
+        f"[{t_all.s:.1f}s]")
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fixture liveness + full sweep (same as default)")
+    ap.add_argument("--quick", action="store_true",
+                    help="fixture liveness only")
+    args = ap.parse_args()
+    print("\n".join(run(quick=args.quick and not args.smoke)))
+
+
+if __name__ == "__main__":
+    main()

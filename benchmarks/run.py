@@ -32,6 +32,7 @@ MODULES = [
     ("E12 service", "benchmarks.bench_service"),
     ("E13 cluster", "benchmarks.bench_cluster"),
     ("serving", "benchmarks.bench_serving"),
+    ("analysis gate", "benchmarks.bench_analysis"),
 ]
 
 

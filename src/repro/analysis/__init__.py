@@ -1,0 +1,80 @@
+"""repro.analysis — jaxpr-level static analysis of the registered models.
+
+Walks the jaxprs of every registered cost model (Hadoop, cluster, the
+calibration loss, the gradient-search objectives) under the axis bounds of
+:func:`repro.spec.hadoop_space`, plus AST / launch-geometry passes for the
+parts no jaxpr reaches.  Five checkers:
+
+==================  ======================================================
+``nan-hazard``      div/log/sqrt/sub whose operand intervals reach a
+                    singularity (0/0, inf-inf, 0*inf, log 0) without a
+                    double-``where`` guard
+``grad-blocker``    floor/ceil/round/int-cast/stop_gradient on a path that
+                    ``grad_objective``/``calibrate`` differentiates, unless
+                    routed through the ``ste_*`` custom_jvp helpers
+``recompile-hazard``weak-type promotion, Python-scalar leakage, and
+                    trace-unstable bodies that break ChunkedEvaluator's
+                    one-compile-per-key-set contract
+``mask-contract``   cost totals escaping without ``masked_total``/
+                    ``sanitize_costs``; models without validity outputs
+``pallas-kernel``   block/grid/index-map/kernel-arity geometry of the
+                    Pallas launches, checked without a TPU
+==================  ======================================================
+
+Run ``python -m repro.analysis`` for the CI gate (non-zero exit on any
+finding not accepted in ``analysis_baseline.json``), or
+:func:`run_all` programmatically.
+"""
+
+from __future__ import annotations
+
+from .findings import (DEFAULT_BASELINE, FINDING_FIELDS, Finding, Report,
+                       load_baseline, save_baseline)
+from .interval import Interval
+from .targets import TraceTarget, iter_targets
+
+__all__ = [
+    "Finding",
+    "Report",
+    "Interval",
+    "TraceTarget",
+    "run_all",
+    "checker_names",
+    "iter_targets",
+    "load_baseline",
+    "save_baseline",
+    "DEFAULT_BASELINE",
+    "FINDING_FIELDS",
+]
+
+
+def checker_names() -> list[str]:
+    """Registry order == report order; frozen in repro/spec/manifest.json."""
+    from .checkers import CHECKERS
+
+    return list(CHECKERS)
+
+
+def run_all(checkers=None, targets=None) -> Report:
+    """Run every (or the named) checker over every registered target.
+
+    ``targets`` overrides the registry — used by the analyzer's own tests
+    to point checkers at known-bad fixtures.
+    """
+    from .checkers import CHECKERS, AnalysisContext
+
+    ctx = AnalysisContext() if targets is None \
+        else AnalysisContext(targets=list(targets))
+    report = Report()
+    for name, mod in CHECKERS.items():
+        if checkers is not None and name not in checkers:
+            continue
+        report.findings.extend(mod.run(ctx))
+        report.checkers_run.append(name)
+    for t in ctx.targets:
+        if not t.traceable:
+            report.skipped[t.name] = t.skip_reason
+    for tname, an in ctx._analyzed.items():
+        if an.unknown_prims:
+            report.coverage_gaps[tname] = sorted(an.unknown_prims)
+    return report

@@ -1,0 +1,54 @@
+"""Checker registry for :mod:`repro.analysis`.
+
+Each checker module exposes ``run(ctx) -> list[Finding]`` where ``ctx`` is
+an :class:`AnalysisContext` carrying lazily-traced targets.  The registry
+order is the report order; checker names are frozen in
+``repro/spec/manifest.json``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..absint import Analysis, analyze_jaxpr
+from ..targets import TraceTarget, iter_targets, trace_target
+
+__all__ = ["CHECKERS", "AnalysisContext"]
+
+
+@dataclass
+class AnalysisContext:
+    """Shared state for one analysis run: targets are traced (and abstractly
+    interpreted) once, then reused by every jaxpr-level checker."""
+
+    targets: list[TraceTarget] = field(default_factory=iter_targets)
+    _traced: dict = field(default_factory=dict)
+    _analyzed: dict = field(default_factory=dict)
+
+    def traced(self, t: TraceTarget):
+        if t.name not in self._traced:
+            self._traced[t.name] = trace_target(t)
+        return self._traced[t.name]
+
+    def analyzed(self, t: TraceTarget) -> Analysis:
+        if t.name not in self._analyzed:
+            closed, intervals, _names = self.traced(t)
+            self._analyzed[t.name] = analyze_jaxpr(
+                closed, intervals, grad_mode=t.grad_mode)
+        return self._analyzed[t.name]
+
+
+def _registry():
+    from . import (grad_blocker, mask_contract, nan_hazard, pallas_kernel,
+                   recompile)
+
+    return {
+        "nan-hazard": nan_hazard,
+        "grad-blocker": grad_blocker,
+        "recompile-hazard": recompile,
+        "mask-contract": mask_contract,
+        "pallas-kernel": pallas_kernel,
+    }
+
+
+CHECKERS = _registry()

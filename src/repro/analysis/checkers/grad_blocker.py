@@ -1,0 +1,43 @@
+"""grad-blocker: zero-derivative primitives on a differentiated path.
+
+``floor``/``ceil``/``round``, float->int casts, and ``stop_gradient``
+silently kill gradients: calibration and gradient search see flat
+objectives with no error.  This checker walks only the targets that are
+actually differentiated (``grad_mode=True``: the ``j_totalCost`` path of
+``grad_objective``, the calibration loss, the tuner's relaxed objective)
+and flags those primitives — **unless** they are routed through the
+``ste_*`` helpers in :mod:`repro.core.hadoop.merge_math`, which trace as
+``custom_jvp_call`` (the author owns the gradient there, so interiors are
+exempt on principle), or applied to validity flags (values derived purely
+from comparisons, which carry no useful gradient anyway).
+"""
+
+from __future__ import annotations
+
+from ..findings import Finding
+from .nan_hazard import format_events
+
+__all__ = ["run", "EVENT_KINDS"]
+
+EVENT_KINDS = {
+    "rounding": "floor/ceil/round has zero derivative",
+    "int_cast": "float -> integer cast has zero derivative",
+    "stop_gradient": "stop_gradient severs the path",
+}
+
+_HINT = (
+    "route round counts through merge_math.ste_floor / ste_ceil / ste_round "
+    "(straight-through custom_jvp), or keep the op off the differentiated "
+    "path; stop_gradient is fine on validity flags only"
+)
+
+
+def run(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    for t in ctx.targets:
+        if not t.traceable or not t.grad_mode:
+            continue
+        an = ctx.analyzed(t)
+        findings.extend(
+            format_events(an, t.name, "grad-blocker", EVENT_KINDS, _HINT))
+    return findings

@@ -1,0 +1,156 @@
+"""recompile-hazard: trace instability that breaks one-compile-per-key-set.
+
+:class:`repro.search.evaluator.ChunkedEvaluator`'s contract is ONE compile
+per override key-set: padded fixed-shape chunks mean any grid size reuses
+the same executable.  Three things silently break it:
+
+* **weak-type leakage** — a Python scalar reaching the traced signature
+  gives a ``weak_type=True`` aval; the same call with a strong-typed array
+  is a different compile key, and promotion flips dtypes downstream.
+* **python-scalar outputs** — a weak-typed jaxpr *output* re-promotes in
+  consumers, changing their compile keys per call site.
+* **shape/value-dependent control flow** — Python ``if``/``for`` on traced
+  shapes re-traces to a structurally different jaxpr when the padded block
+  changes, so every distinct grid recompiles (the contract's one compile
+  becomes O(grids)).
+
+The first two are read off the traced jaxpr avals.  The third is probed
+*statically* by tracing the evaluator body twice — same key-set, different
+values and row counts (padded) — and comparing the jaxprs: tracing is
+abstract evaluation, nothing runs on device.
+"""
+
+from __future__ import annotations
+
+from ..findings import Finding
+
+__all__ = ["run", "probe_trace_stability", "weak_type_findings"]
+
+_HINT_WEAK = (
+    "wrap Python scalars with jnp.asarray(..., dtype=...) at the boundary "
+    "(split_overrides does this for evaluator columns)"
+)
+_HINT_RETRACE = (
+    "make the body a function of static shapes only: pad to fixed chunk "
+    "shapes (pad_block) and branch with lax.cond/jnp.where, not Python "
+    "control flow on traced values"
+)
+
+
+def weak_type_findings(closed, target_name: str) -> list[Finding]:
+    """Weak-typed invars / outvars of a traced target."""
+    out: list[Finding] = []
+    jaxpr = closed.jaxpr
+    n_weak_in = sum(
+        1 for v in jaxpr.invars if getattr(v.aval, "weak_type", False))
+    if n_weak_in:
+        out.append(Finding(
+            checker="recompile-hazard",
+            target=target_name,
+            kind="weak_type_input",
+            message=(f"{n_weak_in} traced input(s) carry weak_type=True — "
+                     "a Python scalar reached the trace boundary"),
+            location=f"{target_name} signature in trace",
+            hint=_HINT_WEAK,
+        ))
+    n_weak_out = sum(
+        1 for v in jaxpr.outvars
+        if getattr(getattr(v, "aval", None), "weak_type", False))
+    if n_weak_out:
+        out.append(Finding(
+            checker="recompile-hazard",
+            target=target_name,
+            kind="weak_type_output",
+            message=(f"{n_weak_out} jaxpr output(s) are weak-typed — "
+                     "consumers will re-promote (and re-compile) per dtype"),
+            location=f"{target_name} outputs in trace",
+            hint=_HINT_WEAK,
+        ))
+    return out
+
+
+def probe_trace_stability(fn, args_a, args_b, *, target_name: str,
+                          location: str) -> list[Finding]:
+    """Trace ``fn`` on two same-key-set argument sets; different jaxprs
+    mean the compile cache misses whenever the data changes."""
+    import jax
+
+    try:
+        ja = jax.make_jaxpr(fn)(*args_a)
+        jb = jax.make_jaxpr(fn)(*args_b)
+    except Exception as e:  # value-dependent Python branch on a tracer
+        return [Finding(
+            checker="recompile-hazard",
+            target=target_name,
+            kind="trace_error",
+            message=f"tracing raised {type(e).__name__}: {e}",
+            location=location,
+            hint=_HINT_RETRACE,
+        )]
+    sa, sb = str(ja), str(jb)
+    if sa != sb:
+        import difflib
+        diff = [ln for ln in difflib.unified_diff(
+            sa.splitlines(), sb.splitlines(), lineterm="", n=0)
+            if ln.startswith(("+", "-")) and not ln.startswith(("+++", "---"))]
+        return [Finding(
+            checker="recompile-hazard",
+            target=target_name,
+            kind="retrace",
+            message=("same key-set, different jaxpr (" +
+                     f"{len(diff)} line(s) differ; first: "
+                     f"{diff[0][:120] if diff else '?'}) — every distinct "
+                     "grid/block recompiles"),
+            location=location,
+            hint=_HINT_RETRACE,
+        )]
+    in_a = [str(v.aval) for v in ja.jaxpr.invars]
+    in_b = [str(v.aval) for v in jb.jaxpr.invars]
+    if in_a != in_b:
+        return [Finding(
+            checker="recompile-hazard",
+            target=target_name,
+            kind="signature_drift",
+            message="same key-set, different input avals — compile key "
+                    f"changed: {in_a} vs {in_b}",
+            location=location,
+            hint=_HINT_WEAK,
+        )]
+    return []
+
+
+def _chunked_evaluator_probe() -> list[Finding]:
+    import numpy as np
+
+    from repro.core.hadoop.params import (CostFactors, HadoopParams,
+                                          ProfileStats)
+    from repro.search.evaluator import ChunkedEvaluator, pad_block
+
+    ev = ChunkedEvaluator(HadoopParams(), ProfileStats(), CostFactors(),
+                          chunk=8)
+    body = ev._sharded_body()
+
+    def blocks(values):
+        batched = {"pSortMB": np.asarray(values, dtype=np.float64)}
+        cols, _mask = pad_block(batched, 0, len(values), ev.chunk)
+        cols = {k: np.asarray(v) for k, v in cols.items()}
+        return (cols, dict(ev.base_cfg))
+
+    # same key-set {pSortMB}: different values AND different pre-pad length
+    a = blocks([100.0, 200.0, 300.0])
+    b = blocks([50.0] * 7)
+    return probe_trace_stability(
+        body, a, b,
+        target_name="chunked-evaluator",
+        location="src/repro/search/evaluator.py in _sharded_body")
+
+
+def run(ctx) -> list[Finding]:
+    findings: list[Finding] = []
+    for t in ctx.targets:
+        if not t.traceable:
+            continue
+        closed, _intervals, _names = ctx.traced(t)
+        findings.extend(weak_type_findings(closed, t.name))
+    findings.extend(_chunked_evaluator_probe())
+    return findings

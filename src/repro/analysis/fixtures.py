@@ -1,0 +1,186 @@
+"""Known-bad fixtures: one deliberately-broken model per checker.
+
+These are the analyzer's regression suite — each fixture reproduces the
+bug class its checker exists for, so a refactor that blinds a checker
+fails ``tests/test_analysis.py`` (and ``python -m repro.analysis --smoke``)
+immediately.  None of them ship in any registered model.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .interval import FINITE_TOP, Interval
+from .targets import TraceTarget
+
+__all__ = ["fixture_targets", "MASK_BAD_SOURCE", "bad_pallas_probes",
+           "selftest"]
+
+
+# --------------------------------------------------------------------------
+# jaxpr-level fixtures (traced like real targets)
+# --------------------------------------------------------------------------
+
+
+def _build_nan_fixture():
+    """Single-``where`` masked division — the exact pre-PR-6 Eq. 11 bug:
+    the *forward* value is fine, but the unguarded ``num / den`` still
+    evaluates ``x / 0`` and poisons the cotangent with ``0 * inf``."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(c):
+        ok = c["den"] > 0.0
+        out = jnp.where(ok, c["num"] / c["den"], jnp.inf)
+        return {"cost": out}
+
+    cfg = {"den": jnp.asarray(2.0), "num": jnp.asarray(3.0)}
+    closed = jax.make_jaxpr(f)(cfg)
+    # sorted keys: den, num — den's axis bound attains 0
+    return closed, [Interval(0.0, math.inf, False, True),
+                    Interval(0.0, math.inf, False, True)], ("cost",)
+
+
+def _build_grad_fixture():
+    """Bare ``jnp.floor`` on the differentiated path (should be
+    ``merge_math.ste_floor``)."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(c):
+        return {"cost": jnp.floor(c["x"]) * c["x"]}
+
+    closed = jax.make_jaxpr(f)({"x": jnp.asarray(4.0)})
+    return closed, [FINITE_TOP], ("cost",)
+
+
+def _build_recompile_fixture():
+    """A Python float crossing the trace boundary: weak-typed input."""
+    import jax
+
+    def f(x):
+        return {"cost": x + 1.0}
+
+    closed = jax.make_jaxpr(f)(3.0)      # python scalar -> weak_type=True
+    return closed, [FINITE_TOP], ("cost",)
+
+
+def fixture_targets() -> list[TraceTarget]:
+    return [
+        TraceTarget(
+            name="fixture-nan",
+            doc="single-where masked division (pre-PR-6 Eq. 11 bug)",
+            build=_build_nan_fixture,
+        ),
+        TraceTarget(
+            name="fixture-grad",
+            doc="bare jnp.floor on a differentiated path",
+            build=_build_grad_fixture,
+            grad_mode=True,
+        ),
+        TraceTarget(
+            name="fixture-recompile",
+            doc="weak-typed python scalar at the trace boundary",
+            build=_build_recompile_fixture,
+        ),
+    ]
+
+
+def value_branching_body():
+    """For :func:`..checkers.recompile.probe_trace_stability`: a Python
+    branch on a *traced value* — the body cannot trace at all (every call
+    would need concrete data, defeating one-compile-per-key-set)."""
+    import jax.numpy as jnp
+
+    def body(cols):
+        x = cols["pSortMB"]
+        if x[0] > 4.0:                   # python branch on a traced value
+            x = x * 2.0
+        return jnp.sum(x)
+
+    return body
+
+
+# --------------------------------------------------------------------------
+# AST fixture for mask-contract
+# --------------------------------------------------------------------------
+
+MASK_BAD_SOURCE = '''\
+import jax.numpy as jnp
+
+
+class LeakyEvaluator(Evaluator):
+    """Reads raw model costs; inf rows win the argmin."""
+
+    def evaluate(self, overrides):
+        out = self.model_fn({**self.base_cfg, **overrides})
+        total = out[self.cost_key]              # no masked_total
+        best = jnp.argmin(total)
+        return SearchResult(total_cost=float(total[best]), best=best)
+'''
+
+
+# --------------------------------------------------------------------------
+# pallas fixture: a launch whose block shape does not divide the operand
+# --------------------------------------------------------------------------
+
+
+def _bad_pallas_probe():
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    x = jnp.zeros((4, 1000), jnp.float32)
+    pl.pallas_call(
+        kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((1, 300), lambda i, j: (i, j))],   # 1000 % 300
+        out_specs=pl.BlockSpec((1, 300), lambda i: (i, 0)),       # 1-ary map
+        out_shape=jax.ShapeDtypeStruct((4, 1000), jnp.float32),
+        name="fixture_bad_block",
+    )(x)
+
+
+def bad_pallas_probes() -> dict:
+    return {"fixture-bad-block": _bad_pallas_probe}
+
+
+# --------------------------------------------------------------------------
+# self-test: every checker must fire on its fixture
+# --------------------------------------------------------------------------
+
+
+def selftest() -> dict[str, list]:
+    """Run each checker against its known-bad fixture; returns findings per
+    checker name.  Every list must be non-empty for a healthy analyzer."""
+    from .checkers import CHECKERS, AnalysisContext
+    from .checkers import mask_contract, pallas_kernel, recompile
+
+    ctx = AnalysisContext(targets=fixture_targets())
+    out: dict[str, list] = {}
+    out["nan-hazard"] = CHECKERS["nan-hazard"].run(ctx)
+    out["grad-blocker"] = CHECKERS["grad-blocker"].run(ctx)
+
+    weak = []
+    for t in ctx.targets:
+        closed, _ivals, _names = ctx.traced(t)
+        weak.extend(recompile.weak_type_findings(closed, t.name))
+    body = value_branching_body()
+    import numpy as np
+
+    weak.extend(recompile.probe_trace_stability(
+        body,
+        ({"pSortMB": np.zeros(8)},),
+        ({"pSortMB": np.ones(8)},),
+        target_name="fixture-recompile",
+        location="fixtures.value_branching_body"))
+    out["recompile-hazard"] = weak
+
+    out["mask-contract"] = mask_contract.check_source(
+        MASK_BAD_SOURCE, "fixture_evaluator.py")
+    out["pallas-kernel"] = pallas_kernel.probe_kernels(
+        probes=bad_pallas_probes())
+    return out

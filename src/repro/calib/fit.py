@@ -32,7 +32,13 @@ from repro.core.hadoop.params import CostFactors
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.spec import CalibrationReport, JobSpec, hadoop_space
 
-__all__ = ["Observation", "calibrate", "observations_from_pairs", "COST_FACTOR_NAMES"]
+__all__ = [
+    "Observation",
+    "build_loss_fn",
+    "calibrate",
+    "observations_from_pairs",
+    "COST_FACTOR_NAMES",
+]
 
 logger = logging.getLogger("repro.calib")
 
@@ -72,6 +78,35 @@ def _stack_configs(observations: Sequence[Observation]):
 
     packed = [o.spec.pack() for o in observations]
     return {k: jnp.stack([p[k] for p in packed]) for k in packed[0]}
+
+
+def build_loss_fn(cols, names: Sequence[str], y, w, space=None):
+    """Build the calibration loss ``u -> weighted mean squared rel. error``.
+
+    ``cols`` is a stacked packed-config dict, ``names`` the axes being fitted
+    (``u`` maps each to its unconstrained value), ``y``/``w`` the observed
+    costs and weights.  Module-level (rather than a closure inside
+    :func:`calibrate`) so ``repro.analysis`` can trace the exact loss that
+    calibration differentiates.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.hadoop.model import job_model_jnp
+
+    space = hadoop_space() if space is None else space
+    names = list(names)
+
+    def loss_fn(u):
+        cfg = dict(cols)
+        for n in names:
+            cfg[n] = jnp.broadcast_to(space[n].project(u[n]), y.shape)
+        out = job_model_jnp(cfg)
+        rel = (out["j_totalCost"] - y) / y
+        wv = w * jax.lax.stop_gradient(out["valid"])
+        return jnp.sum(wv * rel * rel) / jnp.maximum(jnp.sum(wv), 1e-12)
+
+    return loss_fn
 
 
 def calibrate(
@@ -146,14 +181,7 @@ def calibrate(
             len(observations) - n_valid, len(observations),
         )
 
-    def loss_fn(u):
-        cfg = dict(cols)
-        for n in names:
-            cfg[n] = jnp.broadcast_to(space[n].project(u[n]), y.shape)
-        out = job_model_jnp(cfg)
-        rel = (out["j_totalCost"] - y) / y
-        wv = w * jax.lax.stop_gradient(out["valid"])
-        return jnp.sum(wv * rel * rel) / jnp.maximum(jnp.sum(wv), 1e-12)
+    loss_fn = build_loss_fn(cols, names, y, w, space)
 
     opt_cfg = AdamWConfig(
         peak_lr=peak_lr,

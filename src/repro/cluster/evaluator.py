@@ -222,23 +222,31 @@ class ClusterEvaluator(Evaluator):
                 )
             if fleet[0].speedup > 1.0:
                 fast_n, fast_spd = fleet[0].count, fleet[0].speedup
+        # strong-typed scalars (weak-typed defaults change the compile key
+        # when an axis switches between scalar and batched-column form)
+        fdt = jnp.result_type(float)
         self.base_cfg = {
-            "pNumNodes": jnp.asarray(float(base.num_nodes)),
-            "pMaxMapsPerNode": jnp.asarray(float(base.map_slots_per_node)),
-            "pMaxRedPerNode": jnp.asarray(float(base.reduce_slots_per_node)),
-            "pReduceSlowstart": jnp.asarray(float(base.reduce_slowstart)),
-            "schedFair": jnp.asarray(1.0 if base.scheduler == "fair" else 0.0),
-            "arrivalRate": jnp.asarray(float(base_rate)),
-            "pNumFastNodes": jnp.asarray(float(fast_n)),
-            "fastSpeedup": jnp.asarray(float(fast_spd)),
+            "pNumNodes": jnp.asarray(float(base.num_nodes), dtype=fdt),
+            "pMaxMapsPerNode": jnp.asarray(
+                float(base.map_slots_per_node), dtype=fdt),
+            "pMaxRedPerNode": jnp.asarray(
+                float(base.reduce_slots_per_node), dtype=fdt),
+            "pReduceSlowstart": jnp.asarray(
+                float(base.reduce_slowstart), dtype=fdt),
+            "schedFair": jnp.asarray(
+                1.0 if base.scheduler == "fair" else 0.0, dtype=fdt),
+            "arrivalRate": jnp.asarray(float(base_rate), dtype=fdt),
+            "pNumFastNodes": jnp.asarray(float(fast_n), dtype=fdt),
+            "fastSpeedup": jnp.asarray(float(fast_spd), dtype=fdt),
             # fifo/fair bases seed schedPolicy=0 so the legacy schedFair
             # axis keeps full control (schedPolicy supersedes it when
             # nonzero); only the preemptive bases — which schedFair cannot
             # express — pin the policy code
             "schedPolicy": jnp.asarray(
                 float(POLICIES.index(base.scheduler))
-                if POLICIES.index(base.scheduler) >= 2 else 0.0),
-            "preemptTimeout": jnp.asarray(float(base.preempt_timeout)),
+                if POLICIES.index(base.scheduler) >= 2 else 0.0, dtype=fdt),
+            "preemptTimeout": jnp.asarray(
+                float(base.preempt_timeout), dtype=fdt),
         }
 
     # ---------------- Evaluator interface ----------------

@@ -386,13 +386,19 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
     # nominal busy seconds (baseline-speed work estimate over all slots)
     busy = (n_maps * map_cost + n_reds * (s["shuffle"] + s["red_work"])).sum()
     span = jnp.maximum(fin.max() - arrival.min(), 1e-9)
+    # percentile interpolates between sorted neighbours (lo + (hi-lo)*frac);
+    # with >= 2 infinite latencies (unconverged scenario) that is inf - inf
+    # = nan.  Double-where: the percentile only ever sees finite values, and
+    # unconverged scenarios report inf — the same sentinel `finish` uses.
+    lat_safe = jnp.where(jnp.isfinite(latency), latency, 0.0)
     return dict(
         finish=fin,
         map_finish=st["map_fin"],
         latency=latency,
         converged=converged.astype(jnp.float32),
         mean_latency=latency.mean(),
-        p95_latency=jnp.percentile(latency, 95.0),
+        p95_latency=jnp.where(
+            converged, jnp.percentile(lat_safe, 95.0), jnp.inf),
         makespan=span,
         utilization=busy / (span * jnp.maximum(cap_m + cap_r, 1.0)),
     )

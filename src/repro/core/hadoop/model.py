@@ -61,9 +61,13 @@ def pack_config(
     array for grid evaluation (e.g. ``cfg["pSortMB"] = jnp.linspace(...)``).
     """
     cfg = {}
+    # strong-typed scalars: bare asarray(float) is weak-typed, which makes
+    # the compile key differ between scalar defaults and batched override
+    # columns (flagged by repro.analysis recompile-hazard)
+    fdt = jnp.result_type(float)
     for src in (p, s, c):
         for k in src.__dataclass_fields__:
-            cfg[k] = jnp.asarray(float(getattr(src, k)))
+            cfg[k] = jnp.asarray(float(getattr(src, k)), dtype=fdt)
     return cfg
 
 
@@ -121,6 +125,17 @@ def _num_passes(n, f):
     return jnp.where(n <= 1.0, 0.0, jnp.where(n <= f, 1.0, many))
 
 
+def _masked_div(num, den, ok):
+    """``num / den`` where ``ok``, ``+inf`` elsewhere — double-``where`` form.
+
+    The inner ``where`` means the division never sees the degenerate
+    denominator, so its local derivative is finite and the masked-out
+    cotangent is exactly 0 rather than 0 * inf = nan.  The forward value is
+    identical to the bare ``where(ok, num / den, inf)``.
+    """
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), jnp.inf)
+
+
 # --------------------------------------------------------------------------
 # §2 — map task, branch-free
 # --------------------------------------------------------------------------
@@ -149,16 +164,13 @@ def _map_model(cfg: dict) -> dict:
     cpu_mapwrite = o["outMapSize"] * cfg["cOutComprCPUCost"]
 
     # Collect/Spill (Eqs. 11-19).
-    # Double-where guard: at degenerate profiles (sMapSizeSel -> 0) the pair
-    # width is 0 and this division is +inf.  The forward value is unchanged
-    # (the outer where selects inf there, exactly what num/0 produces), but
-    # the inner where keeps the division's local derivative finite so the
-    # masked-out cotangent stays 0 instead of 0 * inf = nan.
+    # At degenerate profiles (sMapSizeSel -> 0) the pair width is 0 and this
+    # division is +inf; _masked_div's double-where keeps the forward value
+    # (inf where the mask fails) while the masked-out cotangent stays 0
+    # instead of 0 * inf = nan.
     w_ok = o["outPairWidth"] > 0.0
     ser_num = cfg["pSortMB"] * MiB * (1.0 - cfg["pSortRecPerc"]) * cfg["pSpillPerc"]
-    o["maxSerPairs"] = ste_floor(
-        jnp.where(w_ok, ser_num / jnp.where(w_ok, o["outPairWidth"], 1.0), jnp.inf)
-    )
+    o["maxSerPairs"] = ste_floor(_masked_div(ser_num, o["outPairWidth"], w_ok))
     o["maxAccPairs"] = ste_floor(
         cfg["pSortMB"] * MiB * cfg["pSortRecPerc"] * cfg["pSpillPerc"] / 16.0
     )

@@ -44,6 +44,7 @@ __all__ = [
     "grid_search_ev",
     "random_search_ev",
     "coordinate_descent_ev",
+    "build_relaxed_objective",
     "gradient_descent_ev",
     "grid_search",
     "random_search",
@@ -244,6 +245,29 @@ def _search_axes(evaluator: Evaluator, space: Mapping[str, Sequence[float]]):
     return axes
 
 
+def build_relaxed_objective(evaluator: Evaluator,
+                            space: Mapping[str, Sequence[float]]):
+    """Build the relaxed scalar objective that gradient descent differentiates.
+
+    Returns ``(raw_cost, axes, keys)``: ``raw_cost`` maps a dict of
+    unconstrained per-key scalars to the evaluator's differentiable cost
+    after per-axis :meth:`~repro.spec.Axis.project` transforms.  Raises
+    :class:`NotDifferentiableError` for non-differentiable backends.
+    Module-level (rather than a closure inside :func:`gradient_descent_ev`)
+    so ``repro.analysis`` can trace exactly what the tuner descends.
+    """
+    objective = evaluator.grad_objective()
+    keys = list(space.keys())
+    axes = _search_axes(evaluator, space)
+
+    def raw_cost(u_scalars):
+        over = {k: axes[k].project(u_scalars[k]) for k in keys}
+        cost, _ = objective(over)
+        return cost
+
+    return raw_cost, axes, keys
+
+
 def gradient_descent_ev(
     evaluator: Evaluator,
     space: Mapping[str, Sequence[float]],
@@ -281,7 +305,7 @@ def gradient_descent_ev(
     back — loudly — to :func:`coordinate_descent_ev`.
     """
     try:
-        objective = evaluator.grad_objective()
+        raw_cost, axes, keys = build_relaxed_objective(evaluator, space)
     except NotDifferentiableError as e:
         logger.warning(
             "gradient_descent_ev: backend is not differentiable (%s); "
@@ -294,8 +318,6 @@ def gradient_descent_ev(
 
     from repro.optim import AdamWConfig, adamw_init, adamw_update
 
-    keys = list(space.keys())
-    axes = _search_axes(evaluator, space)
     rng = np.random.default_rng(seed)
 
     # Starting points: restart 0 at the per-axis midpoint candidate (the
@@ -307,11 +329,6 @@ def gradient_descent_ev(
         starts = [float(vals[len(vals) // 2])]
         starts += list(rng.uniform(lo, hi, size=max(0, restarts - 1)))
         u0[k] = jnp.asarray([float(axes[k].relax(v)) for v in starts[:restarts]])
-
-    def raw_cost(u_scalars):
-        over = {k: axes[k].project(u_scalars[k]) for k in keys}
-        cost, _ = objective(over)
-        return cost
 
     opt_cfg = AdamWConfig(
         peak_lr=peak_lr,

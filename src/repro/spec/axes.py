@@ -338,6 +338,10 @@ _HADOOP_BOUNDS: dict[str, tuple[float | None, float | None, bool]] = {
     "pReduceSlowstart": (0, 1, False),
     "pSplitSize": (0, None, True),
     "sInputPairWidth": (0, None, True),
+    # Strictly positive: Eq. 10 (outPairWidth = outMapSize / outMapPairs)
+    # divides by it; a profile observing literally zero map-output pairs has
+    # no defined pair width, so 0 is outside the physical domain.
+    "sMapPairsSel": (0, None, True),
     "sInputCompressRatio": (0, None, True),
     "sIntermCompressRatio": (0, None, True),
     "sOutCompressRatio": (0, None, True),

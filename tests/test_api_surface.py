@@ -64,3 +64,27 @@ def test_registered_backends_cover_the_manifest_spaces(manifest):
     import repro.api as api
 
     assert set(manifest["axes"]) <= set(api.available_models())
+
+
+def test_analysis_checker_registry_frozen(manifest):
+    from repro.analysis import checker_names
+
+    assert checker_names() == manifest["analysis"]["checkers"], (
+        "the static-analysis checker registry drifted from manifest.json — "
+        "adding/removing/renaming a checker is a surface change: update the "
+        "manifest (and analysis_baseline.json fingerprints) deliberately"
+    )
+
+
+def test_analysis_finding_schema_frozen(manifest):
+    from dataclasses import fields
+
+    from repro.analysis import FINDING_FIELDS
+    from repro.analysis.findings import Finding
+
+    assert list(FINDING_FIELDS) == manifest["analysis"]["finding_fields"]
+    # the dataclass itself is the schema; FINDING_FIELDS must mirror it
+    assert [f.name for f in fields(Finding)] == list(FINDING_FIELDS), (
+        "Finding's fields drifted from FINDING_FIELDS — baseline "
+        "fingerprints and the --json report are built from this schema"
+    )
