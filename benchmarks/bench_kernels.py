@@ -70,3 +70,9 @@ def run(quick: bool = False) -> list[str]:
     lines += table(["case", "max abs err", "VMEM tile set"], rows)
     write_md("kernels.md", "E11: Pallas kernel sweeps", lines)
     return lines
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run)

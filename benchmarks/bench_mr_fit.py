@@ -86,11 +86,6 @@ def run(quick: bool = False) -> list[str]:
 
 
 if __name__ == "__main__":
-    import argparse
+    from .common import bench_main
 
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller inputs + fewer fit steps (CI smoke mode)")
-    args = ap.parse_args()
-    for line in run(quick=args.quick):
-        print(line)
+    bench_main(run)

@@ -69,3 +69,9 @@ def run(quick: bool = False) -> list[str]:
     lines += table(hdr, rows_multi)
     write_md("roofline.md", "E8: 40-cell roofline", lines)
     return lines
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run)

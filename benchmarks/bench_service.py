@@ -135,12 +135,6 @@ def run(quick: bool = False, smoke: bool = False) -> list[str]:
 
 
 if __name__ == "__main__":
-    import argparse
+    from .common import bench_main
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: small workload, assert equivalence + "
-                         "coalescing (no absolute-speedup gate)")
-    ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
-    print("\n".join(run(quick=args.quick, smoke=args.smoke)))
+    bench_main(run)

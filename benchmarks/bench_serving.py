@@ -34,3 +34,9 @@ def run(quick: bool = False) -> list[str]:
     lines += table(["attention", "prefill s", "decode s", "tok/s"], rows)
     write_md("serving.md", "Serving throughput (smoke)", lines)
     return lines
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run)

@@ -65,3 +65,9 @@ def run(quick: bool = False) -> list[str]:
                     "reruns"], rows2)
     write_md("sim_vs_analytic.md", "E4: analytic vs simulation", lines)
     return lines
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run)

@@ -117,3 +117,9 @@ def run(quick: bool = False) -> list[str]:
                   f"{len(errs)} cells"]
     write_md("tpu_model.md", "E9: analytical model vs dry-run", lines)
     return lines
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run)

@@ -106,14 +106,6 @@ def run(quick: bool = False, smoke: bool = False) -> list[str]:
 
 
 if __name__ == "__main__":
-    import argparse
+    from .common import bench_main
 
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: assert gradient descent lands within 5% "
-                         "of the grid optimum in fewer evaluator calls than "
-                         "coordinate descent")
-    ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
-    for line in run(quick=args.quick, smoke=args.smoke):
-        print(line)
+    bench_main(run)

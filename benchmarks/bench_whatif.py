@@ -124,3 +124,9 @@ def run(quick: bool = False) -> list[str]:
     lines += ["", f"speedup over python oracle: {rate_topk / py_rate:.0f}x"]
     write_md("whatif_throughput.md", "E5: what-if engine throughput", lines)
     return lines
+
+
+if __name__ == "__main__":
+    from .common import bench_main
+
+    bench_main(run)

@@ -11,8 +11,11 @@ One module per paper aspect (DESIGN.md §9 experiment index):
   E11 bench_kernels          Pallas kernels vs jnp oracles
   E12 bench_service          async what-if service vs per-query baseline
   E13 bench_cluster          vectorized capacity planner vs per-scenario DES
+  E14 bench_obs              observability overhead (bit-for-bit + < 5%)
 
-Markdown reports land in artifacts/bench/.
+Markdown reports land in artifacts/bench/, machine-readable metrics in
+artifacts/bench/BENCH_results.json (one entry per module, merged across
+invocations).
 """
 
 from __future__ import annotations
@@ -31,6 +34,7 @@ MODULES = [
     ("E11 kernels", "benchmarks.bench_kernels"),
     ("E12 service", "benchmarks.bench_service"),
     ("E13 cluster", "benchmarks.bench_cluster"),
+    ("E14 obs", "benchmarks.bench_obs"),
     ("serving", "benchmarks.bench_serving"),
     ("analysis gate", "benchmarks.bench_analysis"),
 ]
@@ -42,6 +46,8 @@ def main() -> None:
     ap.add_argument("--only", default="", help="substring filter")
     args = ap.parse_args()
 
+    from .common import RESULTS_NAME, report
+
     failures = 0
     for label, modname in MODULES:
         if args.only and args.only not in modname and args.only not in label:
@@ -52,13 +58,17 @@ def main() -> None:
             mod = __import__(modname, fromlist=["run"])
             lines = mod.run(quick=args.quick)
             print("\n".join(lines))
-            print(f"[done in {time.time()-t0:.1f}s]")
+            wall = time.time() - t0
+            print(f"[done in {wall:.1f}s]")
+            report(modname.rsplit(".", 1)[-1], wall_s=wall, ok=1)
         except Exception:
             failures += 1
+            report(modname.rsplit(".", 1)[-1], wall_s=time.time() - t0, ok=0)
             print(f"[FAILED]\n{traceback.format_exc()[-3000:]}")
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
-    print("\nAll benchmarks complete; reports in artifacts/bench/")
+    print(f"\nAll benchmarks complete; reports + {RESULTS_NAME} in "
+          "artifacts/bench/")
 
 
 if __name__ == "__main__":

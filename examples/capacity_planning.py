@@ -15,8 +15,16 @@
              WhatIfService that serves the single-job model.
 5. VERIFY    the recommended cluster on the trusted DES.
 
-Run:  PYTHONPATH=src python examples/capacity_planning.py
+Run:  PYTHONPATH=src python examples/capacity_planning.py [--trace out.json]
+
+With ``--trace``, the whole run executes under ``repro.obs.observe`` and
+writes a Perfetto-loadable Chrome trace: real-time spans for the planner
+and service, plus a virtual-time swimlane rendering of the baseline DES
+run (one lane per node slot, tasks carved into the paper's phases).
 """
+
+import argparse
+import contextlib
 
 import numpy as np
 
@@ -32,6 +40,16 @@ from repro.cluster import (
 )
 from repro.core.hadoop.simulator import SimConfig
 from repro.search import WhatIfService, grid_search_ev, search_topk
+
+ap = argparse.ArgumentParser(description="capacity planning walkthrough")
+ap.add_argument("--trace", default=None, metavar="OUT.json",
+                help="write a Perfetto-loadable Chrome trace of this run")
+args, _ = ap.parse_known_args()
+_stack = contextlib.ExitStack()
+if args.trace:
+    from repro.obs import observe
+
+    _stack.enter_context(observe(args.trace))
 
 RATE = 0.08          # offered load today: jobs/s
 classes = default_job_classes()
@@ -62,6 +80,11 @@ for label, cc, tr, sc in [
      SimConfig(seed=1, straggler_prob=0.1, node_failures=((40.0, 2),))),
 ]:
     r = simulate_workload(tr, cc, sc)
+    if args.trace and label == "steady Poisson, FIFO":
+        # swimlane rendering of the baseline run on the virtual-time track
+        from repro.obs import workload_trace
+
+        workload_trace(tr, r, cc)
     delays = [j.queueing_delay for j in r.jobs]
     print(f"  {label:30s} p95={r.p95_latency:7.1f}s mean={r.mean_latency:6.1f}s "
           f"queue p95={np.percentile(delays, 95):6.1f}s "
@@ -121,3 +144,7 @@ print(f"  planner model p95 = {model:.1f}s, DES p95 = {exact:.1f}s "
 baseline = ev.exact_cost({})
 print(f"  today's cluster DES p95 = {baseline:.1f}s -> plan is "
       f"{baseline / max(exact, 1e-9):.2f}x better on the tail")
+
+_stack.close()
+if args.trace:
+    print(f"\n[trace written to {args.trace}; open at https://ui.perfetto.dev]")

@@ -49,7 +49,18 @@ __all__ = [
     "tune",
     "calibrate",
     "serve",
+    "observe",
 ]
+
+
+def observe(trace: str | None = None, **kw):
+    """Turn on instrumentation for a block: ``with api.observe("out.json")
+    as ob: ...`` records metrics on ``ob.registry`` and spans on
+    ``ob.tracer``, and writes a Perfetto-loadable Chrome trace on exit when
+    ``trace`` is given.  Delegates to :func:`repro.obs.observe`."""
+    from repro.obs import observe as _observe
+
+    return _observe(trace, **kw)
 
 
 @runtime_checkable

@@ -29,6 +29,7 @@ from typing import Iterable, Mapping, Sequence
 import numpy as np
 
 from repro.core.hadoop.params import CostFactors
+from repro.obs import current as _obs_current
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.spec import CalibrationReport, JobSpec, hadoop_space
 
@@ -195,27 +196,36 @@ def calibrate(
     @jax.jit
     def step(u, state):
         loss, grads = jax.value_and_grad(loss_fn)(u)
-        new_u, new_state, _ = adamw_update(grads, state, u, opt_cfg)
-        return loss, new_u, new_state
+        new_u, new_state, metrics = adamw_update(grads, state, u, opt_cfg)
+        return loss, metrics["grad_norm"], new_u, new_state
 
     u = u0
     initial_loss = float(loss_fn(u0))
     best_loss, best_u = initial_loss, u0
     history: list[float] = [initial_loss]
+    gnorm_history: list[float] = []
+    ob = _obs_current()
     for i in range(steps):
         # `loss` is evaluated at the pre-update params `u` of this step
-        loss, new_u, state = step(u, state)
+        loss, gnorm, new_u, state = step(u, state)
         fl = float(loss)
         if np.isfinite(fl) and fl < best_loss:
             best_loss, best_u = fl, u
         u = new_u
         if (i + 1) % max(1, history_every) == 0:
             history.append(fl)
+            gnorm_history.append(float(gnorm))
+            if ob.enabled:
+                ob.tracer.counter("calibration", loss=fl,
+                                  grad_norm=float(gnorm))
     final_loss = float(loss_fn(u))
     if np.isfinite(final_loss) and final_loss < best_loss:
         best_loss, best_u = final_loss, u
 
     fitted = {n: float(space[n].project(best_u[n])) for n in names}
+    # loss/grad evaluations spent: one per step plus the two endpoint
+    # loss_fn calls (the validity probe above is not a loss evaluation)
+    n_model_evals = steps + 2
     report = CalibrationReport(
         fitted=fitted,
         initial=start,
@@ -224,6 +234,13 @@ def calibrate(
         steps=steps,
         n_observations=len(observations),
         loss_history=tuple(history),
+        grad_norm_history=tuple(gnorm_history),
+        n_model_evals=n_model_evals,
     )
+    if ob.enabled:
+        ob.registry.counter("calib.runs").inc()
+        ob.registry.counter("calib.steps").inc(steps)
+        ob.registry.counter("calib.model_evals").inc(n_model_evals)
+        ob.registry.gauge("calib.final_loss").set(best_loss)
     logger.info("calibrate: %s", report.summary())
     return report

@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import heapq
 import random
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Mapping
@@ -71,6 +72,7 @@ import numpy as np
 
 from repro.core.hadoop.simulator import SimConfig, _duration
 from repro.core.hadoop.params import HadoopParams
+from repro.obs import current as _obs_current
 
 from .workload import WorkloadTrace, task_costs
 
@@ -169,6 +171,13 @@ class ClusterTaskRecord:
     end: float
     speculative: bool = False
     killed: bool = False
+    #: reduces only: when the task's own work began — the later of its
+    #: network transfer finishing and its job's maps finishing.  The trace
+    #: builder (repro.obs.destrace) renders [start, shuffle_end] as the
+    #: overlapped "network" phase.  0.0 for maps and killed tasks.
+    shuffle_end: float = 0.0
+    #: why a killed record died: "preempt" | "failure" | "superseded".
+    kill_reason: str = ""
 
 
 @dataclass
@@ -300,6 +309,7 @@ def simulate_workload(
     sim: SimConfig = SimConfig(),
 ) -> WorkloadResult:
     """Run a workload trace on a shared virtual cluster."""
+    _t_wall = time.perf_counter()
     rng = random.Random(sim.seed)
     n_nodes = max(1, cluster.num_nodes)
     speed = cluster.node_speeds()
@@ -577,7 +587,7 @@ def simulate_workload(
             reduce_durs.pop(uid, None)
         res.records.append(
             ClusterTaskRecord(jid, kind, index, node, start, now, spec,
-                              killed=True))
+                              killed=True, kill_reason="preempt"))
         alive_copies = any(c in running for c in copies.get(index, []))
         if index not in completed and index not in pending and not alive_copies:
             pending.append(index)
@@ -626,7 +636,7 @@ def simulate_workload(
                     j.pending_reduces.append(index)
             res.records.append(
                 ClusterTaskRecord(jid, kind, index, node, start, ftime,
-                                  spec, killed=True))
+                                  spec, killed=True, kill_reason="failure"))
             res.num_failure_reruns += 1
         # Completed map outputs on the failed node are lost for every job
         # whose reducers still need them.
@@ -689,8 +699,14 @@ def simulate_workload(
             running[uid] = (jid, kind, index, node, start, _INF, spec)
             continue
         del running[uid]
+        sh_end = 0.0
+        if kind == "reduce":
+            # end = work-start + wk, so end - wk is when the overlapped
+            # network transfer stopped gating the task
+            sh_end = end - reduce_durs.get(uid, (0.0, 0.0))[1]
         res.records.append(
-            ClusterTaskRecord(jid, kind, index, node, start, end, spec))
+            ClusterTaskRecord(jid, kind, index, node, start, end, spec,
+                              shuffle_end=sh_end))
 
         if kind == "map":
             map_slots[node] += 1
@@ -707,7 +723,8 @@ def simulate_workload(
                         map_slots[n2] += 1
                         job.running_maps -= 1
                         res.records.append(ClusterTaskRecord(
-                            jid, k2, i2, n2, s2, clock, sp2, killed=True))
+                            jid, k2, i2, n2, s2, clock, sp2, killed=True,
+                            kill_reason="superseded"))
                 job.map_copies[index] = []
             job.stats.map_finish = (clock if job.maps_done()
                                     else job.stats.map_finish)
@@ -739,7 +756,8 @@ def simulate_workload(
                         job.running_reds -= 1
                         reduce_durs.pop(sib, None)
                         res.records.append(ClusterTaskRecord(
-                            jid, k2, i2, n2, s2, clock, sp2, killed=True))
+                            jid, k2, i2, n2, s2, clock, sp2, killed=True,
+                            kill_reason="superseded"))
                 job.red_copies[index] = []
             fill_slots(clock)
             maybe_speculate(clock)
@@ -768,4 +786,18 @@ def simulate_workload(
                        for nd in range(n_nodes))
     if slot_seconds > 0:
         res.slot_utilization = sum(res.node_busy_s) / slot_seconds
+    ob = _obs_current()
+    if ob.enabled:
+        reg = ob.registry
+        reg.counter("des.runs").inc()
+        reg.counter("des.jobs").inc(len(jobs))
+        reg.counter("des.tasks").inc(len(res.records))
+        reg.counter("des.preempted").inc(res.num_preempted)
+        reg.counter("des.failure_reruns").inc(res.num_failure_reruns)
+        reg.counter("des.speculative_launched").inc(
+            res.num_speculative_launched)
+        reg.histogram("des.makespan_s").record(res.makespan)
+        el_us = (time.perf_counter() - _t_wall) * 1e6
+        ob.tracer.complete("des.simulate", ob.tracer.now_us() - el_us, el_us,
+                           jobs=len(jobs), scheduler=policy)
     return res

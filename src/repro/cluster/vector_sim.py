@@ -77,6 +77,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.obs import current as _obs_current
 
 from .workload import WorkloadTrace, shuffle_full, task_costs
 
@@ -484,5 +485,19 @@ def simulate_batch(
     with_fair = bool(np.any(pol > 0.5))
     with_preempt = bool(np.any(pol > 1.5))
     with_capacity = bool(np.any(pol > 2.5))
-    out = _compiled(devs, n_steps, with_fair, with_preempt, with_capacity)(arrs)
+    ob = _obs_current()
+    with ob.tracer.span("vector_sim.simulate_batch", scenarios=b,
+                        n_steps=n_steps):
+        pre = _compiled.cache_info().misses if ob.enabled else 0
+        out = _compiled(devs, n_steps, with_fair, with_preempt,
+                        with_capacity)(arrs)
+    if ob.enabled:
+        reg = ob.registry
+        reg.counter("vector_sim.batches").inc()
+        reg.counter("vector_sim.scenarios").inc(b)
+        reg.counter("vector_sim.scenarios_padded").inc(pad)
+        if _compiled.cache_info().misses > pre:
+            reg.counter("vector_sim.compiles").inc()
+            ob.tracer.instant("wave-kernel compile", scope="p",
+                              n_steps=n_steps)
     return {k: np.asarray(v)[:b] for k, v in out.items()}

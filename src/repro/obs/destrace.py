@@ -1,0 +1,198 @@
+"""Turn a cluster DES result into a Perfetto swimlane trace.
+
+:func:`workload_trace` renders a :class:`~repro.cluster.sched.WorkloadResult`
+as Chrome trace events on a **virtual-time** clock (1 simulated second =
+1e6 trace µs, so Perfetto's ruler reads directly in simulated seconds):
+
+* one process per node, one thread ("m0", "m1", ... / "r0", ...) per
+  occupied slot lane — tasks pack into lanes exactly as they occupied
+  slots, so the view is the cluster's Gantt chart;
+* every task is an ``X`` span; *inside* it, sub-spans carve the task into
+  the paper's phase vocabulary (:class:`repro.spec.report.PhaseBreakdown`):
+  maps split into ``map_read / map_spill / map_merge / map_write``
+  proportional to the job class's §2-§3 per-phase costs; reduces show the
+  recorded ``network`` shuffle transfer (overlapping the job's maps) then
+  ``shuffle / reduce_merge / reduce_write`` carved from the §4 costs;
+* kills are instants (``preempt`` / ``failure`` / ``superseded``) at the
+  kill time; speculative copies are flagged in the span args;
+* a "jobs" process holds one lane per job (``queued`` then ``running``),
+  and a ``cluster`` counter track plots running maps/reduces over time.
+
+Pure host-side post-processing: reads the result's records, touches no jax.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.obs.trace import Tracer
+
+__all__ = ["workload_trace", "SIM_SECOND_US"]
+
+#: virtual-time scale: one simulated second rendered as this many trace µs.
+SIM_SECOND_US = 1e6
+
+_PID_JOBS = 2
+_PID_NODE0 = 10          # node k -> pid _PID_NODE0 + k
+_TID_REDUCE0 = 1000      # reduce lane k -> tid _TID_REDUCE0 + k
+
+
+@functools.lru_cache(maxsize=256)
+def _phase_fracs(jc) -> tuple[tuple[tuple[str, float], ...],
+                              tuple[tuple[str, float], ...]]:
+    """((map phase, fraction), ...), ((reduce phase, fraction), ...) for a
+    :class:`~repro.cluster.workload.JobClass` — §2-§4 per-phase costs
+    normalized within the task, the split the DES's scalar task costs hide."""
+    from repro.core.hadoop.ref import job_model
+
+    jm = job_model(jc.params, jc.stats, jc.costs)
+    m = jm.map
+    map_parts = (
+        ("map_read", m.ioReadCost + m.cpuReadCost),
+        ("map_spill", m.ioSpillCost + m.cpuSpillCost),
+        ("map_merge", m.ioMergeCost + m.cpuMergeCost),
+        ("map_write", m.ioMapWriteCost + m.cpuMapWriteCost),
+    )
+    r = jm.reduce
+    red_parts = (
+        ("shuffle", r.ioShuffleCost + r.cpuShuffleCost),
+        ("reduce_merge", r.ioSortCost + r.cpuSortCost),
+        ("reduce_write", r.ioWriteCost + r.cpuWriteCost),
+    )
+
+    def norm(parts):
+        total = sum(v for _, v in parts)
+        if total <= 0:
+            return ()
+        return tuple((k, v / total) for k, v in parts if v > 0)
+
+    return norm(map_parts), norm(red_parts)
+
+
+def _carve(tracer: Tracer, pid: int, tid: int, t0: float, t1: float,
+           fracs) -> None:
+    """Emit sub-spans splitting [t0, t1] (virtual s) by (name, frac) pairs."""
+    span = t1 - t0
+    if span <= 0 or not fracs:
+        return
+    at = t0
+    for i, (name, frac) in enumerate(fracs):
+        dur = span * frac if i < len(fracs) - 1 else t1 - at
+        tracer.complete(name, at * SIM_SECOND_US, dur * SIM_SECOND_US,
+                        pid=pid, tid=tid)
+        at += dur
+
+
+def workload_trace(trace, result, cluster, *, tracer: Tracer | None = None
+                   ) -> Tracer:
+    """Emit ``result`` (from :func:`repro.cluster.sched.simulate_workload`
+    of ``trace`` on ``cluster``) as a virtual-time Perfetto swimlane.
+
+    ``tracer`` defaults to the ambient one (:func:`repro.obs.current`); a
+    fresh :class:`Tracer` is created when the ambient is the null tracer,
+    so ``workload_trace(...).write(path)`` works standalone.  Returns the
+    tracer written to.
+    """
+    if tracer is None:
+        from repro.obs import current
+
+        tracer = current().tracer
+        if not tracer.enabled:
+            tracer = Tracer()
+
+    klass_of = {a.job_id: a.klass for a in trace.arrivals}
+    n_nodes = max(1, cluster.num_nodes)
+    for nd in range(n_nodes):
+        tracer.process_name(_PID_NODE0 + nd, f"node {nd}")
+    tracer.process_name(_PID_JOBS, "jobs")
+
+    # ---- slot-lane packing: records reoccupy lanes as they did slots ----
+    recs = sorted(result.records, key=lambda r: (r.start, r.end))
+    lane_busy: dict[tuple[int, str], list[float]] = {}
+    lanes_used: dict[tuple[int, str], int] = {}
+
+    def lane_for(rec) -> int:
+        key = (rec.node, rec.kind)
+        ends = lane_busy.setdefault(key, [])
+        for i, e in enumerate(ends):
+            if e <= rec.start + 1e-12:
+                ends[i] = rec.end
+                return i
+        ends.append(rec.end)
+        lanes_used[key] = len(ends)
+        return len(ends) - 1
+
+    for rec in recs:
+        lane = lane_for(rec)
+        pid = _PID_NODE0 + rec.node
+        tid = lane if rec.kind == "map" else _TID_REDUCE0 + lane
+        jc = klass_of.get(rec.job_id)
+        name = f"{jc.name if jc else 'job'}#{rec.job_id} {rec.kind}[{rec.index}]"
+        args = {"job": rec.job_id, "index": rec.index}
+        if rec.speculative:
+            args["speculative"] = 1
+        if rec.killed:
+            args["killed"] = rec.kill_reason or "killed"
+        tracer.complete(name, rec.start * SIM_SECOND_US,
+                        (rec.end - rec.start) * SIM_SECOND_US,
+                        pid=pid, tid=tid, **args)
+        if rec.killed:
+            tracer.instant(rec.kill_reason or "killed",
+                           ts=rec.end * SIM_SECOND_US, pid=pid, tid=tid,
+                           job=rec.job_id, index=rec.index)
+            continue
+        if jc is None:
+            continue
+        map_fracs, red_fracs = _phase_fracs(jc)
+        if rec.kind == "map":
+            _carve(tracer, pid, tid, rec.start, rec.end, map_fracs)
+        else:
+            # the recorded network transfer overlaps the job's maps; the
+            # §4 shuffle/merge/write work fills the rest of the span
+            work_start = rec.start
+            if rec.shuffle_end > rec.start + 1e-12:
+                tracer.complete("network", rec.start * SIM_SECOND_US,
+                                (rec.shuffle_end - rec.start) * SIM_SECOND_US,
+                                pid=pid, tid=tid)
+                work_start = rec.shuffle_end
+            _carve(tracer, pid, tid, work_start, rec.end, red_fracs)
+
+    for (node, kind), n in sorted(lanes_used.items()):
+        for lane in range(n):
+            tid = lane if kind == "map" else _TID_REDUCE0 + lane
+            tracer.thread_name(_PID_NODE0 + node, tid,
+                               f"{kind[0]}{lane}",
+                               sort_index=tid)
+
+    # ---- per-job lanes: queued then running ----
+    for js in result.jobs:
+        tid = js.job_id
+        tracer.thread_name(_PID_JOBS, tid, f"job {js.job_id} {js.name}",
+                           sort_index=tid)
+        if js.first_launch != float("inf"):
+            tracer.complete("queued", js.submit_time * SIM_SECOND_US,
+                            (js.first_launch - js.submit_time) * SIM_SECOND_US,
+                            pid=_PID_JOBS, tid=tid)
+            if js.finish != float("inf"):
+                tracer.complete(
+                    "running", js.first_launch * SIM_SECOND_US,
+                    (js.finish - js.first_launch) * SIM_SECOND_US,
+                    pid=_PID_JOBS, tid=tid,
+                    n_maps=js.n_maps, n_reduces=js.n_reduces)
+
+    # ---- running-task counter track (event sweep over live records) ----
+    deltas: dict[float, list[int]] = {}
+    for rec in recs:
+        d0 = deltas.setdefault(rec.start, [0, 0])
+        d1 = deltas.setdefault(rec.end, [0, 0])
+        k = 0 if rec.kind == "map" else 1
+        d0[k] += 1
+        d1[k] -= 1
+    m = r = 0
+    for t in sorted(deltas):
+        dm, dr = deltas[t]
+        m += dm
+        r += dr
+        tracer.counter("cluster running", ts=t * SIM_SECOND_US,
+                       pid=_PID_JOBS, maps=m, reduces=r)
+    return tracer

@@ -1,0 +1,85 @@
+"""Bridges into jax's own instrumentation: profiler capture + compile events.
+
+Two hooks, both strictly optional and gated on the ambient observability:
+
+* :func:`profile_capture` — wrap a block in ``jax.profiler`` trace capture
+  (TensorBoard-loadable) *and* an obs span, so device-level profiles line
+  up with the host-side trace.
+* :func:`install_compile_listener` — subscribe to ``jax.monitoring``
+  backend-compile duration events and forward them to whatever
+  Observability is ambient *at event time*.  jax listeners are global and
+  effectively permanent, so we install exactly one process-wide dispatcher
+  that is a no-op while observability is off.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+__all__ = ["profile_capture", "install_compile_listener"]
+
+_listener_installed = False
+
+#: jax.monitoring event names worth surfacing (backend compile time is the
+#: dominant one-off cost this repo cares about — one compile per key-set).
+_EVENTS_OF_INTEREST = (
+    "/jax/core/compile/backend_compile_duration",
+    "/jax/core/compile/jaxpr_to_mlir_module_duration",
+)
+
+
+def _dispatch(event: str, duration_secs: float, **kwargs) -> None:
+    from repro.obs import current
+
+    ob = current()
+    if not ob.enabled:
+        return
+    if not any(event.startswith(e) for e in _EVENTS_OF_INTEREST):
+        return
+    short = event.rsplit("/", 1)[-1]
+    ob.registry.counter(f"jax.{short}").inc()
+    ob.registry.histogram(f"jax.{short}_s").record(duration_secs)
+    ob.tracer.instant(f"jax:{short}", scope="p", duration_s=duration_secs)
+
+
+def install_compile_listener() -> bool:
+    """Install the process-wide jax.monitoring dispatcher (idempotent).
+
+    Returns True if the listener is active (now or from an earlier call),
+    False when jax.monitoring is unavailable.
+    """
+    global _listener_installed
+    if _listener_installed:
+        return True
+    try:
+        from jax import monitoring
+    except Exception:  # pragma: no cover - jax always present in this repo
+        return False
+    register = getattr(monitoring, "register_event_duration_secs_listener", None)
+    if register is None:  # pragma: no cover - older/newer jax
+        return False
+    register(_dispatch)
+    _listener_installed = True
+    return True
+
+
+@contextlib.contextmanager
+def profile_capture(logdir: str) -> Iterator[None]:
+    """Capture a ``jax.profiler`` trace for the block into ``logdir``.
+
+    Pairs the device-level profile with a span on the ambient tracer so the
+    two timelines can be cross-referenced.  Loads in TensorBoard or
+    Perfetto (``logdir/plugins/profile/...``).
+    """
+    import jax
+
+    from repro.obs import current
+
+    ob = current()
+    with ob.tracer.span("jax.profiler.capture", logdir=logdir):
+        jax.profiler.start_trace(logdir)
+        try:
+            yield
+        finally:
+            jax.profiler.stop_trace()

@@ -20,11 +20,12 @@ accounting, end-to-end latency) stay identical:
 
 from __future__ import annotations
 
+import math
 import threading
 from collections import deque
 from typing import Generic, Iterator, TypeVar
 
-import numpy as np
+from repro.obs.metrics import percentile_interp
 
 __all__ = ["AdmissionQueue", "LatencyStats"]
 
@@ -32,7 +33,14 @@ T = TypeVar("T")
 
 
 class LatencyStats:
-    """Streaming end-to-end latency recorder (seconds) with percentiles."""
+    """Streaming end-to-end latency recorder (seconds) with percentiles.
+
+    Percentiles use the repo's one interpolation rule
+    (:func:`repro.obs.percentile_interp` — linear between order statistics,
+    the same method ``numpy.percentile`` defaults to), with well-defined
+    small-sample behavior: no samples -> 0.0, one sample -> that sample for
+    every ``p``.  :meth:`merge` pools per-worker recorders losslessly.
+    """
 
     def __init__(self) -> None:
         self._samples: list[float] = []
@@ -42,6 +50,16 @@ class LatencyStats:
         with self._lock:
             self._samples.append(float(seconds))
 
+    def merge(self, other: "LatencyStats") -> "LatencyStats":
+        """Pool another recorder's samples into this one (e.g. combining
+        per-worker stats).  Exact: percentiles of the merged recorder are
+        percentiles of the union sample set.  Returns ``self``."""
+        with other._lock:
+            theirs = list(other._samples)
+        with self._lock:
+            self._samples.extend(theirs)
+        return self
+
     @property
     def count(self) -> int:
         with self._lock:
@@ -49,14 +67,13 @@ class LatencyStats:
 
     def mean(self) -> float:
         with self._lock:
-            return float(np.mean(self._samples)) if self._samples else 0.0
+            return (math.fsum(self._samples) / len(self._samples)
+                    if self._samples else 0.0)
 
     def percentile(self, p: float) -> float:
         """Linear-interpolated percentile; 0.0 when nothing was recorded."""
         with self._lock:
-            if not self._samples:
-                return 0.0
-            return float(np.percentile(self._samples, p))
+            return percentile_interp(sorted(self._samples), p)
 
     @property
     def p50(self) -> float:
@@ -86,11 +103,18 @@ class AdmissionQueue(Generic[T]):
     the high-water mark for queue-pressure reporting.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, *, depth_gauge=None) -> None:
         self._items: deque[T] = deque()
         self._cond = threading.Condition()
         self._closed = False
         self.peak_depth = 0
+        #: optional observability hook: any object with ``set(depth)`` (a
+        #: repro.obs Gauge) called under the lock on every depth change.
+        self.depth_gauge = depth_gauge
+
+    def _depth_changed(self) -> None:
+        if self.depth_gauge is not None:
+            self.depth_gauge.set(len(self._items))
 
     def __len__(self) -> int:
         with self._cond:
@@ -113,6 +137,7 @@ class AdmissionQueue(Generic[T]):
             self._items.append(item)
             depth = len(self._items)
             self.peak_depth = max(self.peak_depth, depth)
+            self._depth_changed()
             self._cond.notify_all()
             return depth
 
@@ -126,6 +151,7 @@ class AdmissionQueue(Generic[T]):
             self._items.extend(items)
             depth = len(self._items)
             self.peak_depth = max(self.peak_depth, depth)
+            self._depth_changed()
             self._cond.notify_all()
             return depth - n0
 
@@ -145,20 +171,27 @@ class AdmissionQueue(Generic[T]):
         with self._cond:
             try:
                 self._items.remove(item)
+                self._depth_changed()
                 return True
             except ValueError:
                 return False
 
     def pop(self) -> T | None:
         with self._cond:
-            return self._items.popleft() if self._items else None
+            item = self._items.popleft() if self._items else None
+            if item is not None:
+                self._depth_changed()
+            return item
 
     def take(self, max_items: int | None = None) -> list[T]:
         """Pop up to ``max_items`` (all pending when ``None``)."""
         with self._cond:
             n = len(self._items) if max_items is None else min(max_items,
                                                                len(self._items))
-            return [self._items.popleft() for _ in range(n)]
+            out = [self._items.popleft() for _ in range(n)]
+            if out:
+                self._depth_changed()
+            return out
 
     def wait(self, timeout: float | None = None) -> bool:
         """Block until the queue is non-empty or closed.  Returns ``True``

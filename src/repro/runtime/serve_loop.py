@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Iterator, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +28,33 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.obs import MetricsRegistry
+from repro.obs import current as _obs_current
 from repro.runtime.batching import AdmissionQueue, LatencyStats
 
 __all__ = ["Request", "Server"]
+
+
+class _CounterView(Mapping):
+    """Read-only mapping over a registry's ``server.*`` counters — the
+    legacy ``Server.stats`` dict, now a view so the registry is the single
+    source of truth."""
+
+    _KEYS = ("prefills", "decode_ticks", "tokens_out")
+
+    def __init__(self, registry: MetricsRegistry):
+        self._registry = registry
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self._KEYS:
+            raise KeyError(key)
+        return int(self._registry.counter(f"server.{key}").value)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._KEYS)
+
+    def __len__(self) -> int:
+        return len(self._KEYS)
 
 
 @dataclass
@@ -54,7 +79,11 @@ class Server:
         self._decode = jax.jit(
             lambda p, tok, caches, pos: lm.decode_step(p, cfg, tok, caches, pos)
         )
-        self.stats = {"prefills": 0, "decode_ticks": 0, "tokens_out": 0}
+        #: the server's own always-on registry (prefills/ticks/tokens live
+        #: here; merge into an ambient one with ``ob.registry.merge``)
+        self.metrics = MetricsRegistry()
+        #: legacy read-only view kept for existing callers/tests
+        self.stats = _CounterView(self.metrics)
         self.latency = LatencyStats()
 
     def _sample(self, logits: jax.Array, key) -> int:
@@ -79,7 +108,9 @@ class Server:
         the tick counter was really a decode-call counter.)
         """
         key = jax.random.PRNGKey(0)
-        queue: AdmissionQueue[Request] = AdmissionQueue()
+        ob = _obs_current()
+        queue: AdmissionQueue[Request] = AdmissionQueue(
+            depth_gauge=self.metrics.gauge("server.queue_depth"))
         t_admit: dict[int, float] = {}
         for req in requests:
             t_admit[id(req)] = time.perf_counter()
@@ -93,20 +124,23 @@ class Server:
                 req = queue.pop()
                 if req is None:
                     break
-                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, caches, pos = self._prefill(self.params, toks)
-                self.stats["prefills"] += 1
+                with ob.tracer.span("server.prefill", rid=req.rid,
+                                    prompt_len=len(req.prompt)):
+                    toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                    logits, caches, pos = self._prefill(self.params, toks)
+                self.metrics.counter("server.prefills").inc()
                 key, sub = jax.random.split(key)
                 req.generated.append(self._sample(logits, sub))
                 active.append((req, caches, int(pos)))
 
             # one lockstep decode tick over every unfinished slot
             ticked = False
+            tokens_this_tick = 0
             for i, (req, caches, pos) in enumerate(active):
                 if len(req.generated) >= req.max_new_tokens:
                     continue
                 if not ticked:
-                    self.stats["decode_ticks"] += 1
+                    self.metrics.counter("server.decode_ticks").inc()
                     ticked = True
                 tok = jnp.asarray([[req.generated[-1]]], jnp.int32)
                 logits, caches = self._decode(
@@ -114,8 +148,13 @@ class Server:
                 )
                 key, sub = jax.random.split(key)
                 req.generated.append(self._sample(logits, sub))
-                self.stats["tokens_out"] += 1
+                self.metrics.counter("server.tokens_out").inc()
+                tokens_this_tick += 1
                 active[i] = (req, caches, pos + 1)
+            if ticked and ob.enabled:
+                ob.tracer.counter("server", active_slots=len(active),
+                                  queued=len(queue),
+                                  tokens_per_tick=tokens_this_tick)
 
             # retire finished slots (freeing them for queued requests)
             still: list[tuple[Request, dict, int]] = []
@@ -124,6 +163,8 @@ class Server:
                     req.done = True
                     req.latency_s = time.perf_counter() - t_admit[id(req)]
                     self.latency.record(req.latency_s)
+                    self.metrics.histogram("server.latency_s").record(
+                        req.latency_s)
                 else:
                     still.append((req, caches, pos))
             active = still

@@ -32,6 +32,7 @@ for the TPU-side tuner, so every strategy in
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
 
@@ -41,6 +42,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.obs import current as _obs_current
 from repro.core.hadoop.model import job_model_jnp, pack_config
 from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
 from repro.core.hadoop.simulator import SimConfig, simulate_job
@@ -444,16 +446,51 @@ class ChunkedEvaluator(Evaluator):
         overrides (padding rows are computed but dropped here).
         """
         batched, static, n = self._split(overrides)
+        ob = _obs_current()
+        t0 = time.perf_counter() if ob.enabled else 0.0
         out_blocks: dict[str, list[np.ndarray]] = {}
-        for start in range(0, n, self.chunk):
-            stop = min(start + self.chunk, n)
-            cols, _ = self._pad(batched, start, stop)
-            out = self._eval_fn(cols, static)
-            for k, v in out.items():
-                out_blocks.setdefault(k, []).append(np.asarray(v)[: stop - start])
+        with ob.tracer.span("evaluator.evaluate", rows=n):
+            for start in range(0, n, self.chunk):
+                stop = min(start + self.chunk, n)
+                cols, _ = self._pad(batched, start, stop)
+                pre = self.eval_cache_size() if ob.enabled else 0
+                out = self._eval_fn(cols, static)
+                if ob.enabled:
+                    self._note_chunk(ob, batched, pre, self.eval_cache_size())
+                for k, v in out.items():
+                    out_blocks.setdefault(k, []).append(
+                        np.asarray(v)[: stop - start])
+        if ob.enabled:
+            self._note_evaluate(ob, n, time.perf_counter() - t0)
         outputs = {k: np.concatenate(v) for k, v in out_blocks.items()}
         total = masked_total(outputs, self.cost_key)
         return SearchResult(overrides=batched, outputs=outputs, total_cost=total)
+
+    # ---------------- observability (host-side only; never inside jit) ----
+
+    def _note_chunk(self, ob, batched, pre_compiles: int,
+                    post_compiles: int) -> None:
+        """Per-chunk accounting: the one-compile-per-key-set contract as a
+        runtime-observable metric."""
+        ob.registry.counter("evaluator.chunks").inc()
+        if post_compiles > pre_compiles:
+            key_set = ",".join(sorted(batched))
+            ob.registry.counter("evaluator.compiles").inc()
+            ob.tracer.instant("xla compile", scope="p", key_set=key_set)
+
+    def _note_evaluate(self, ob, n: int, elapsed: float) -> None:
+        n_chunks = -(-n // self.chunk)
+        padded = n_chunks * self.chunk - n
+        reg = ob.registry
+        reg.counter("evaluator.rows").inc(n)
+        reg.counter("evaluator.rows_padded").inc(padded)
+        reg.histogram("evaluator.evaluate_s").record(elapsed)
+        if elapsed > 0:
+            ob.tracer.counter(
+                "evaluator",
+                configs_per_s=n / elapsed,
+                padding_waste=padded / (n + padded) if n + padded else 0.0,
+            )
 
     def report(self, overrides: Mapping[str, Any]) -> CostReport:
         """Typed per-phase report for these rows (the ``repro.api`` path).
@@ -499,8 +536,20 @@ class ChunkedEvaluator(Evaluator):
             raise ValueError(f"block of {n} rows exceeds chunk={self.chunk}")
         cols, mask = self._pad(batched, 0, n)
         kk = min(k, self.chunk)
-        costs, idx, inv_c, inv_i, n_valid, reasons = self._topk_fn(
-            cols, static, mask, k=kk)
+        ob = _obs_current()
+        with ob.tracer.span("evaluator.chunk_topk", rows=n, k=kk):
+            pre = self.topk_cache_size() if ob.enabled else 0
+            costs, idx, inv_c, inv_i, n_valid, reasons = self._topk_fn(
+                cols, static, mask, k=kk)
+        if ob.enabled:
+            reg = ob.registry
+            reg.counter("evaluator.topk_blocks").inc()
+            reg.counter("evaluator.rows").inc(n)
+            reg.counter("evaluator.rows_padded").inc(self.chunk - n)
+            if self.topk_cache_size() > pre:
+                reg.counter("evaluator.compiles").inc()
+                ob.tracer.instant("xla compile", scope="p",
+                                  key_set=",".join(sorted(batched)))
         return BlockTopK(
             np.asarray(costs), np.asarray(idx),
             np.asarray(inv_c), np.asarray(inv_i), int(n_valid),

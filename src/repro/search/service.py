@@ -51,6 +51,7 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
+from repro.obs import current as _obs_current
 from repro.runtime.batching import AdmissionQueue, LatencyStats
 from repro.spec import CostReport, PhaseBreakdown
 from repro.spec.report import invalid_reasons
@@ -273,7 +274,10 @@ class WhatIfService:
         # depth is recorded BEFORE publishing: once put() returns, a fast
         # worker may already have resolved the future and handed q.stats out
         q.stats.queue_depth = len(self._queue)
-        self._queue.put(q)
+        depth = self._queue.put(q)
+        ob = _obs_current()
+        if ob.enabled:
+            ob.tracer.counter("service queue", depth=depth)
         return q.future
 
     def probe(self, assignment: Mapping[str, float], *,
@@ -365,6 +369,9 @@ class WhatIfService:
         for i, q in enumerate(qs):
             q.stats.queue_depth = depth + i
         self._queue.put_many(qs)
+        ob = _obs_current()
+        if ob.enabled:
+            ob.tracer.counter("service queue", depth=depth + len(qs))
         return [q.future.result() for q in qs]
 
     def _make_query(self, cols, n, exact_fallback) -> _Query:
@@ -372,6 +379,14 @@ class WhatIfService:
         with self._lock:
             self.stats["queries"] += 1
             self.stats["rows"] += n
+        ob = _obs_current()
+        if ob.enabled:
+            ob.registry.counter("service.queries").inc()
+            ob.registry.counter("service.rows").inc(n)
+            # async span: begins here on the submitting thread, ends in
+            # _resolve on the worker — the query's submit->resolve life
+            ob.tracer.async_begin("query", q.qid, rows=n,
+                                  keys=",".join(q.sig))
         return q
 
     # ------------------------------------------------------------------
@@ -445,12 +460,25 @@ class WhatIfService:
                 col[offset:offset + take] = q.cols[k][q_start:q_start + take]
             cols[k] = col
 
-        out = self.evaluator.evaluate(cols).outputs
+        ob = _obs_current()
+        with ob.tracer.span("service.chunk", rows=n_rows,
+                            queries=len(segments)):
+            out = self.evaluator.evaluate(cols).outputs
         with self._lock:
             self.stats["chunks"] += 1
             if len(segments) > 1:
                 self.stats["shared_chunks"] += 1
             self.stats["rows_padded"] += self.evaluator.chunk - n_rows
+        if ob.enabled:
+            reg = ob.registry
+            reg.counter("service.chunks").inc()
+            if len(segments) > 1:
+                reg.counter("service.shared_chunks").inc()
+            reg.counter("service.rows_padded").inc(
+                self.evaluator.chunk - n_rows)
+            ob.tracer.counter("chunk sharing",
+                              queries_per_chunk=len(segments))
+            ob.tracer.counter("service queue", depth=len(self._queue))
 
         shared = len(segments) > 1
         for q, q_start, take, offset in segments:
@@ -496,6 +524,15 @@ class WhatIfService:
             q.stats.n_exact = int(exact.sum())
         q.stats.latency_s = time.perf_counter() - q.t_submit
         self.latency.record(q.stats.latency_s)
+        ob = _obs_current()
+        if ob.enabled:
+            ob.registry.histogram("service.latency_s").record(
+                q.stats.latency_s)
+            if q.stats.n_exact:
+                ob.registry.counter("service.exact_rows").inc(q.stats.n_exact)
+            ob.tracer.async_end("query", q.qid,
+                                chunks=q.stats.n_chunks,
+                                shared=q.stats.n_shared_chunks)
         q.future.set_result(QueryResult(
             overrides=dict(q.cols),
             outputs=outputs,

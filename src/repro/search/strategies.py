@@ -25,6 +25,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.core.hadoop.params import CostFactors, HadoopParams, ProfileStats
+from repro.obs import current as _obs_current
 from repro.spec.report import invalid_reason_counts
 
 from .evaluator import (
@@ -343,11 +344,13 @@ def gradient_descent_ev(
 
     @jax.jit
     def step(u, state):
-        _, grads = jax.vmap(jax.value_and_grad(raw_cost))(u)
+        # vals ride along for observability: the per-restart relaxed cost
+        # at the pre-update point (value_and_grad computes them anyway)
+        vals, grads = jax.vmap(jax.value_and_grad(raw_cost))(u)
         grads = {k: jnp.nan_to_num(g, nan=0.0, posinf=0.0, neginf=0.0)
                  for k, g in grads.items()}
         new_u, new_state, _ = adamw_update(grads, state, u, opt_cfg)
-        return new_u, new_state
+        return vals, new_u, new_state
 
     def snapshot(u) -> list[dict[str, float]]:
         return [
@@ -355,13 +358,21 @@ def gradient_descent_ev(
             for r in range(restarts)
         ]
 
+    ob = _obs_current()
     candidates: list[dict[str, float]] = snapshot(u0)
     u = u0
     every = max(1, steps // max(1, checkpoints))
     for i in range(steps):
-        u, state = step(u, state)
+        vals, u, state = step(u, state)
         if (i + 1) % every == 0 or i == steps - 1:
             candidates += snapshot(u)
+            if ob.enabled:
+                v = np.asarray(vals, dtype=np.float64)
+                v = v[np.isfinite(v)]
+                if v.size:
+                    ob.tracer.counter("tuner", best_relaxed_cost=float(v.min()))
+    if ob.enabled:
+        ob.registry.counter("tuner.gradient_steps").inc(steps)
 
     # ---- round-and-validate: dedupe, predicate-check, evaluator re-cost ----
     seen: set[tuple] = set()
@@ -394,6 +405,9 @@ def gradient_descent_ev(
     overrides = {k: np.asarray([r[k] for r in rows]) for k in keys}
     res = evaluator.evaluate(overrides)
     evals = len(rows)
+    if ob.enabled:
+        ob.registry.counter("tuner.evaluator_calls").inc()
+        ob.registry.counter("tuner.validated_rows").inc(evals)
     costs = np.asarray(res.total_cost, dtype=np.float64)
 
     best_exact = False

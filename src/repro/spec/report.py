@@ -254,6 +254,11 @@ class CalibrationReport:
     steps: int                        # optimizer steps taken
     n_observations: int               # (JobSpec, cost) pairs fitted against
     loss_history: tuple[float, ...] = ()   # sampled loss trace
+    #: grad-norm trace sampled at the same cadence as ``loss_history``
+    #: (without the initial-point entry loss_history leads with)
+    grad_norm_history: tuple[float, ...] = ()
+    #: model evaluations the fit spent (loss/grad calls, incl. endpoints)
+    n_model_evals: int = 0
 
     @property
     def param_names(self) -> tuple[str, ...]:

@@ -39,6 +39,17 @@ def test_api_exports_frozen(manifest):
         assert getattr(api, name, None) is not None, name
 
 
+def test_obs_exports_frozen(manifest):
+    import repro.obs as obs
+
+    assert sorted(obs.__all__) == manifest["repro.obs"], (
+        "repro.obs.__all__ drifted from manifest.json — the observability "
+        "surface is frozen; update the manifest deliberately"
+    )
+    for name in obs.__all__:
+        assert getattr(obs, name, None) is not None, name
+
+
 def test_hadoop_axis_names_frozen(manifest):
     from repro.core.hadoop.model import CONFIG_KEYS
     from repro.spec import hadoop_space
