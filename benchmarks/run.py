@@ -35,6 +35,7 @@ MODULES = [
     ("E12 service", "benchmarks.bench_service"),
     ("E13 cluster", "benchmarks.bench_cluster"),
     ("E14 obs", "benchmarks.bench_obs"),
+    ("E15 cloud", "benchmarks.bench_cloud"),
     ("serving", "benchmarks.bench_serving"),
     ("analysis gate", "benchmarks.bench_analysis"),
 ]

@@ -512,6 +512,10 @@ class _Interp:
         a = self.read(env, eqn.invars[0])
         return [AbsValue(a.ival.monotone(math.exp), eqn.outvars[0])]
 
+    def prim_expm1(self, env, eqn):
+        a = self.read(env, eqn.invars[0])
+        return [AbsValue(a.ival.monotone(math.expm1), eqn.outvars[0])]
+
     def prim_exp2(self, env, eqn):
         a = self.read(env, eqn.invars[0])
         return [AbsValue(a.ival.monotone(lambda v: 2.0 ** min(v, 1e3)),

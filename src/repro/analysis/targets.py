@@ -19,6 +19,12 @@ Targets:
   for the Hadoop evaluator over a representative knob space.
 * ``cluster-rollout``— the wave simulator ``_sim_one`` with every policy
   branch compiled in.
+* ``cloud-rollout``  — the same rollout with the elastic-fleet path
+  (``with_cloud``) compiled in: spot reclamation in expectation,
+  autoscale on/off events, extra-capacity episode billing.
+* ``cloud-pricing``  — the differentiable dollar path
+  (``spot_inflation`` x ``dollars_for``) sensitivity studies descend;
+  traced with a concrete zero billing quantum so it stays ceil-free.
 * ``tpu-model``      — **not jaxpr-traceable** (a pure-numpy table model);
   registered with ``traceable=False`` so reports say *why* rather than
   silently skipping a registered model.  Its mask-contract obligations are
@@ -174,6 +180,45 @@ def _build_tuner_objective():
     return closed, [FINITE_TOP for _ in keys], ("cost",)
 
 
+def _build_cloud_pricing():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cloud.pricing import dollars_for, spot_inflation
+
+    C = 2
+    fdt = jnp.result_type(float)
+    a = {
+        "counts": jnp.ones((C,), dtype=fdt),
+        "prices": jnp.full((C,), 0.4, dtype=fdt),
+        "rate": jnp.full((C,), 1e-4, dtype=fdt),
+        "span": jnp.asarray(3600.0, dtype=fdt),
+        "task_s": jnp.asarray(30.0, dtype=fdt),
+    }
+    ivals = {
+        "counts": Interval(0.0, math.inf, False, True),
+        "prices": Interval(0.0, math.inf, False, True),
+        "rate": Interval(0.0, math.inf, False, True),
+        "span": Interval(0.0, math.inf, False, True),
+        "task_s": Interval(0.0, math.inf, True, True),
+    }
+
+    # the expected dollar cost of a spot fleet: the wall-clock span
+    # inflates by the reclamation model, the fleet rate prices it.  A
+    # concrete billing_quantum=0 keeps the path ceil-free — exactly the
+    # differentiable surface spot_planning sensitivity studies use.
+    def fn(arg):
+        infl = spot_inflation(arg["rate"], arg["task_s"])
+        # per-class: counts[c] * prices[c] * span * infl[c] / 3600
+        per_class = dollars_for(
+            arg["span"] * infl, arg["counts"] * jnp.eye(C), arg["prices"])
+        return per_class.sum()
+
+    closed = jax.make_jaxpr(fn)(a)
+    intervals = [ivals[k] for k in sorted(a)]
+    return closed, intervals, ("dollars",)
+
+
 def _build_cluster_rollout():
     import jax
     import jax.numpy as jnp
@@ -223,6 +268,71 @@ def _build_cluster_rollout():
     return closed, intervals, tuple(names)
 
 
+def _build_cloud_rollout():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cluster.vector_sim import _sim_one
+
+    J, C, Q = 3, 2, 2
+    fdt = jnp.result_type(float)
+    s = {
+        "arrival": jnp.zeros((J,)),
+        "n_maps": jnp.ones((J,)),
+        "n_reds": jnp.ones((J,)),
+        "map_cost": jnp.ones((J,)),
+        "red_work": jnp.ones((J,)),
+        "shuffle": jnp.ones((J,)),
+        "queue": jnp.zeros((J,)),
+        "map_slots": jnp.ones((C,)),
+        "red_slots": jnp.ones((C,)),
+        "speedup": jnp.ones((C,)),
+        "policy": jnp.asarray(0.0, dtype=fdt),
+        "slowstart": jnp.asarray(0.05, dtype=fdt),
+        "queue_frac": jnp.full((Q,), 0.5, dtype=fdt),
+        "reclaim_rate": jnp.full((C,), 1e-4, dtype=fdt),
+        "autoscale": jnp.asarray(1.0, dtype=fdt),
+        "high_water": jnp.asarray(2.0, dtype=fdt),
+        "provision_latency": jnp.asarray(5.0, dtype=fdt),
+        "extra_map_slots": jnp.asarray(2.0, dtype=fdt),
+        "extra_red_slots": jnp.asarray(2.0, dtype=fdt),
+        "billing_quantum": jnp.asarray(60.0, dtype=fdt),
+    }
+    nonneg = Interval(0.0, math.inf, False, True)
+    ivals = {
+        "arrival": nonneg,
+        "n_maps": nonneg,
+        "n_reds": nonneg,
+        "map_cost": nonneg,
+        "red_work": nonneg,
+        "shuffle": nonneg,
+        "queue": Interval(0.0, float(Q - 1)),
+        "map_slots": nonneg,
+        "red_slots": nonneg,
+        "speedup": Interval(1.0, math.inf, False, True),
+        "policy": Interval(0.0, 3.0),
+        "slowstart": Interval(0.0, 1.0),
+        "queue_frac": Interval(0.0, 1.0),
+        "reclaim_rate": nonneg,
+        "autoscale": Interval(0.0, 2.0),
+        "high_water": nonneg,
+        "provision_latency": nonneg,
+        "extra_map_slots": nonneg,
+        "extra_red_slots": nonneg,
+        "billing_quantum": nonneg,
+    }
+    names: list[str] = []
+
+    def fn(scen):
+        out = _sim_one(scen, 8, True, True, True, True)
+        names.extend(sorted(out))
+        return {k: out[k] for k in sorted(out)}
+
+    closed = jax.make_jaxpr(fn)(s)
+    intervals = [ivals[k] for k in sorted(s)]
+    return closed, intervals, tuple(names)
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -258,6 +368,19 @@ def iter_targets() -> list[TraceTarget]:
             name="cluster-rollout",
             doc="vector_sim._sim_one wave rollout, all policies compiled in",
             build=_build_cluster_rollout,
+        ),
+        TraceTarget(
+            name="cloud-rollout",
+            doc="the wave rollout with the elastic-fleet path compiled in "
+                "(spot reclamation, autoscaling, episode billing)",
+            build=_build_cloud_rollout,
+        ),
+        TraceTarget(
+            name="cloud-pricing",
+            doc="the differentiable spot-pricing path (spot_inflation x "
+                "dollars_for), quantum-free so grad stays clean",
+            build=_build_cloud_pricing,
+            grad_mode=True,
         ),
         TraceTarget(
             name="tpu-model",

@@ -19,7 +19,8 @@ is the single entry point over all of them:
 
 Backends register uniformly under a name (``register_model``); a *target*
 everywhere below is a :class:`~repro.spec.JobSpec` (the Hadoop model), a
-registered backend name (``"hadoop"``, ``"tpu"``, ``"cluster"``) plus its
+registered backend name (``"hadoop"``, ``"tpu"``, ``"cluster"``,
+``"cloud"``) plus its
 constructor kwargs, or an already-built evaluator.  Every evaluator behind
 the facade satisfies the :class:`CostModel` protocol: a ``param_space``
 describing its searchable axes (the single source for grid validation —
@@ -129,6 +130,12 @@ def _cluster_factory(classes=None, **kw):
     return ClusterEvaluator(classes, **kw)
 
 
+def _cloud_factory(classes=None, **kw):
+    from repro.cloud import CloudEvaluator
+
+    return CloudEvaluator(classes, **kw)
+
+
 register_model(
     "hadoop", _hadoop_factory,
     doc="the paper's closed-form MapReduce job model (Eqs. 2-98), chunked/sharded",
@@ -141,6 +148,11 @@ register_model(
     "cluster", _cluster_factory,
     doc="multi-job capacity planner (nodes + fast/slow fleet mix, slots, "
         "fifo/fair/fair_preempt/capacity policies, slowstart, arrival rate)",
+)
+register_model(
+    "cloud", _cloud_factory,
+    doc="dollar-cost elastic provisioning (on-demand/spot fleet mix, "
+        "reclaim rate, autoscaler policy, dollars-per-job under an SLO)",
 )
 
 

@@ -16,7 +16,9 @@ contention, and what cluster shape minimizes tail latency?  Three layers:
   fleets (:class:`NodeClass` speed factors), per-job queueing delay /
   latency / makespan, per-node busy time, with the single-job simulator's
   straggler / speculation / failure mechanics (and its exact behaviour on
-  a one-job trace).
+  a one-job trace).  An optional elastic fleet
+  (:class:`repro.cloud.ElasticFleet`) adds spot reclamation and
+  autoscaled extra capacity with per-node online episodes for billing.
 * :mod:`~repro.cluster.vector_sim` + :mod:`~repro.cluster.evaluator` — the
   wave-level JAX rollout (``while_loop`` over scheduling rounds, ``vmap``
   over scenarios, device-sharded via :mod:`repro.compat`) and
@@ -37,7 +39,13 @@ from .sched import (
     WorkloadResult,
     simulate_workload,
 )
-from .vector_sim import POLICIES, estimate_steps, pack_trace, simulate_batch
+from .vector_sim import (
+    POLICIES,
+    estimate_steps,
+    latency_quantile,
+    pack_trace,
+    simulate_batch,
+)
 from .workload import (
     JobArrival,
     JobClass,
@@ -71,6 +79,7 @@ __all__ = [
     "POLICIES",
     "pack_trace",
     "estimate_steps",
+    "latency_quantile",
     "simulate_batch",
     "ClusterEvaluator",
     "UnfinishedWorkloadError",

@@ -73,6 +73,7 @@ import numpy as np
 from repro.core.hadoop.simulator import SimConfig, _duration
 from repro.core.hadoop.params import HadoopParams
 from repro.obs import current as _obs_current
+from repro.obs import percentile_interp
 
 from .workload import WorkloadTrace, task_costs
 
@@ -87,6 +88,7 @@ __all__ = [
 
 _INF = float("inf")
 _EPS = 1e-9
+_MAX_EVENTS = 5_000_000    # reclaim-storm bail-out (see the event loop)
 
 _SCHEDULERS = ("fifo", "fair", "fair_preempt", "capacity")
 
@@ -94,16 +96,29 @@ _SCHEDULERS = ("fifo", "fair", "fair_preempt", "capacity")
 @dataclass(frozen=True)
 class NodeClass:
     """One hardware class of a mixed fleet: ``count`` nodes whose compute
-    runs ``speedup`` times faster than the baseline (network is shared)."""
+    runs ``speedup`` times faster than the baseline (network is shared).
+
+    ``hourly_price`` and ``spot`` are the :mod:`repro.cloud` pricing
+    dimension: a node's capacity costs ``hourly_price`` dollars per online
+    hour, and ``spot`` marks reclaimable (interruptible) capacity — a spot
+    node is periodically reclaimed by the provider (exponential inter-
+    reclaim times at the elastic fleet's ``reclaim_rate``) and replaced
+    after the provisioning latency.  Both default to the pre-cloud
+    behaviour: free, never reclaimed."""
 
     count: int
     speedup: float = 1.0
+    hourly_price: float = 0.0
+    spot: bool = False
 
     def __post_init__(self):
         if self.count < 0:
             raise ValueError(f"node class count must be >= 0, got {self.count}")
         if self.speedup <= 0:
             raise ValueError(f"node speedup must be positive, got {self.speedup}")
+        if self.hourly_price < 0:
+            raise ValueError(
+                f"node hourly_price must be >= 0, got {self.hourly_price}")
 
 
 @dataclass(frozen=True)
@@ -141,15 +156,24 @@ class ClusterConfig:
     def preemptive(self) -> bool:
         return self.scheduler in ("fair_preempt", "capacity")
 
+    def node_table(self) -> list[tuple[float, bool, float, int]]:
+        """Per-node ``(speedup, spot, hourly_price, class_index)`` rows,
+        fastest class first — the node order :meth:`node_speeds`, the
+        free-slot picker, and the wave model's class columns all share.
+        Equal-speed classes keep their declared order (stable sort), which
+        is how a (spot, on-demand) pair maps onto wave class columns."""
+        if not self.node_classes:
+            return [(1.0, False, 0.0, 0)] * max(1, self.num_nodes)
+        rows: list[tuple[float, bool, float, int]] = []
+        for ci, nc in enumerate(sorted(self.node_classes,
+                                       key=lambda c: -c.speedup)):
+            rows.extend([(nc.speedup, nc.spot, nc.hourly_price, ci)] * nc.count)
+        return rows or [(1.0, False, 0.0, 0)]
+
     def node_speeds(self) -> list[float]:
         """Per-node compute speed factors, fastest class first (the order
         the free-slot picker and the wave model's class columns both use)."""
-        if not self.node_classes:
-            return [1.0] * max(1, self.num_nodes)
-        speeds: list[float] = []
-        for nc in sorted(self.node_classes, key=lambda c: -c.speedup):
-            speeds.extend([nc.speedup] * nc.count)
-        return speeds or [1.0]
+        return [row[0] for row in self.node_table()]
 
     @classmethod
     def from_params(cls, p: HadoopParams, *, scheduler: str = "fifo"
@@ -176,7 +200,9 @@ class ClusterTaskRecord:
     #: builder (repro.obs.destrace) renders [start, shuffle_end] as the
     #: overlapped "network" phase.  0.0 for maps and killed tasks.
     shuffle_end: float = 0.0
-    #: why a killed record died: "preempt" | "failure" | "superseded".
+    #: why a killed record died:
+    #: "preempt" | "failure" | "superseded" | "reclaim" (spot reclamation —
+    #: unlike "failure" the node returns after the provisioning latency).
     kill_reason: str = ""
 
 
@@ -218,12 +244,21 @@ class WorkloadResult:
     num_speculative_won: int = 0
     num_failure_reruns: int = 0
     num_preempted: int = 0
+    #: tasks killed + completed map outputs lost to spot reclamations
+    #: (the elastic-fleet sibling of ``num_failure_reruns``)
+    num_reclaimed: int = 0
     #: jobs whose ``finish`` is still inf when the event queue drained (e.g.
     #: every node failed) — latency aggregates are inf then, and this count
     #: is the explicit signal consumers must check instead of discovering
     #: the inf downstream.
     n_unfinished: int = 0
     records: list[ClusterTaskRecord] = field(default_factory=list)
+    #: per-node ``[(online_from, online_to), ...]`` capacity episodes: base
+    #: nodes open at t=0; failure/reclaim/autoscaler-teardown closes an
+    #: episode, replacement/provisioning opens a new one.  This is the
+    #: billing input (:func:`repro.cloud.bill_workload`) and the slot-
+    #: utilization denominator.
+    node_online: list[list[tuple[float, float]]] = field(default_factory=list)
 
     def latencies(self) -> np.ndarray:
         return np.asarray([j.latency for j in self.jobs])
@@ -232,16 +267,22 @@ class WorkloadResult:
     def mean_latency(self) -> float:
         return float(self.latencies().mean()) if self.jobs else 0.0
 
-    @property
-    def p95_latency(self) -> float:
+    def latency_quantile(self, q: float) -> float:
+        """Linear-interpolated latency quantile (``q`` in [0, 100]) — the
+        repo's single percentile rule (:func:`repro.obs.percentile_interp`),
+        shared with the wave model's ``latency_quantile``.  inf when any
+        job never finished: interpolating between infs would yield nan, so
+        the unfinished workload is reported as an explicit inf instead."""
         if not self.jobs:
             return 0.0
         lat = self.latencies()
         if not np.isfinite(lat).all():
-            # percentile interpolation between infs yields nan — report the
-            # unfinished workload as an explicit inf instead
             return _INF
-        return float(np.percentile(lat, 95))
+        return float(percentile_interp(np.sort(lat).tolist(), q))
+
+    @property
+    def p95_latency(self) -> float:
+        return self.latency_quantile(95.0)
 
 
 class _Job:
@@ -307,21 +348,70 @@ def simulate_workload(
     trace: WorkloadTrace,
     cluster: ClusterConfig = ClusterConfig(),
     sim: SimConfig = SimConfig(),
+    elastic=None,
 ) -> WorkloadResult:
-    """Run a workload trace on a shared virtual cluster."""
+    """Run a workload trace on a shared virtual cluster.
+
+    ``elastic`` adds the :mod:`repro.cloud` provisioning lifecycle.  It is
+    duck-typed (``repro.cluster`` must not depend on ``repro.cloud``):
+    anything with the :class:`repro.cloud.ElasticFleet` attributes —
+    ``policy_code`` (0 off / 1 queue-depth / 2 predicted-load),
+    ``max_extra_nodes``, ``high_water``, ``provision_latency``,
+    ``reclaim_rate`` (spot reclaims per node-second) and ``seed`` — works.
+    Spot nodes (``NodeClass.spot``) are reclaimed at exponential intervals
+    (kill + requeue with ``kill_reason="reclaim"``, lost map outputs
+    re-executed, exactly the failure machinery) and replaced after the
+    provisioning latency; autoscaled extra nodes clone the baseline
+    (slowest) class and come online/offline as the policy demands.  The
+    per-node capacity episodes land in ``WorkloadResult.node_online``.
+    """
     _t_wall = time.perf_counter()
     rng = random.Random(sim.seed)
-    n_nodes = max(1, cluster.num_nodes)
-    speed = cluster.node_speeds()
-    if len(speed) != n_nodes:      # num_nodes floor for degenerate configs
-        speed = (speed + [1.0] * n_nodes)[:n_nodes]
-    map_slots = [cluster.map_slots_per_node] * n_nodes
-    red_slots = [cluster.reduce_slots_per_node] * n_nodes
+
+    # elastic-fleet knobs (absent -> the fixed-fleet fast path: no extra
+    # nodes, no reclaim events, and the reclaim RNG stream is never drawn,
+    # keeping fixed-fleet runs bit-identical to the pre-cloud simulator)
+    el_policy = int(getattr(elastic, "policy_code", 0)) if elastic else 0
+    el_extra = (int(getattr(elastic, "max_extra_nodes", 0))
+                if elastic is not None and el_policy > 0 else 0)
+    el_high = float(getattr(elastic, "high_water", 0.0)) if elastic else 0.0
+    el_lat = (float(getattr(elastic, "provision_latency", 0.0))
+              if elastic is not None else 0.0)
+    el_rate = (float(getattr(elastic, "reclaim_rate", 0.0))
+               if elastic is not None else 0.0)
+    el_seed = int(getattr(elastic, "seed", 0)) if elastic else 0
+
+    n_base = max(1, cluster.num_nodes)
+    n_nodes = n_base + el_extra
+    table = cluster.node_table()
+    if len(table) != n_base:       # num_nodes floor for degenerate configs
+        table = (table + [(1.0, False, 0.0, 0)] * n_base)[:n_base]
+    # autoscaled nodes clone the baseline (slowest) class's speed and bill
+    # as on-demand capacity: elastic top-up is never reclaimable
+    base_speed, _, _, base_cls = table[-1]
+    table = table + [(base_speed, False, 0.0, base_cls)] * el_extra
+    speed = [row[0] for row in table]
+    spot = [row[1] for row in table]
+    cls_idx = [row[3] for row in table]
+    is_extra = [nd >= n_base for nd in range(n_nodes)]
+
+    map_slots = [cluster.map_slots_per_node] * n_base + [0] * el_extra
+    red_slots = [cluster.reduce_slots_per_node] * n_base + [0] * el_extra
     # configured capacity per node (map_slots/red_slots are *free* counts);
     # zeroed when a node fails, so shares and utilization see live capacity
-    cap_map = [cluster.map_slots_per_node] * n_nodes
-    cap_red = [cluster.reduce_slots_per_node] * n_nodes
+    cap_map = list(map_slots)
+    cap_red = list(red_slots)
     fail_time = [_INF] * n_nodes
+    # capacity episodes: base nodes online from t=0, extras offline until
+    # provisioned.  Closed on failure/reclaim/teardown, reopened on
+    # replacement/provisioning; the summary closes live episodes at span.
+    online_from: list[float | None] = [0.0] * n_base + [None] * el_extra
+    node_online: list[list[tuple[float, float]]] = [[] for _ in range(n_nodes)]
+    # reclaim draws come from their own stream so a priced-but-stable fleet
+    # replays the exact task-duration draw sequence of the fixed fleet
+    rng_reclaim = random.Random((el_seed + 1) * 1_000_003 + sim.seed * 7919)
+    reclaiming = el_rate > 0 and any(spot)
+    scaling = el_policy > 0 and el_extra > 0
     policy = cluster.scheduler
     fair = policy in ("fair", "fair_preempt")
     capacity = policy == "capacity"
@@ -361,13 +451,38 @@ def simulate_workload(
         push(ftime, 0, "fail", fnode)
     for j in jobs:
         push(j.submit, 1, "arrive", j.jid)
+    if reclaiming:
+        for nd in range(n_base):
+            if spot[nd]:
+                push(rng_reclaim.expovariate(el_rate), 0, "reclaim", nd)
+    # predicted-load policy: the fleet-sizing decision is made up front
+    # (from the closed-form model), so the extra capacity is requested the
+    # moment the workload starts and lands one provisioning latency later
+    extra_online = False
+    extra_pending = False
+    if scaling and el_policy == 2 and jobs:
+        extra_pending = True
+        push(min(j.submit for j in jobs) + el_lat, 1, "provision", 0)
+
+    def workload_done() -> bool:
+        return all(j.stats.finish != _INF for j in jobs)
+
+    def set_offline(nd: int, now: float) -> None:
+        if online_from[nd] is not None:
+            node_online[nd].append((online_from[nd], now))
+            online_from[nd] = None
 
     def free_slot(slots: list[int], prefer_not: int = -1) -> int:
-        # fastest class first (ties keep the homogeneous order: most free
-        # slots, then node index), so mixed fleets fill fast nodes before
-        # slow ones — the wave model's class-ordered allocation rule.
+        # fastest class first, then base fleet before autoscaled extras
+        # (extras drain first, so teardown can catch them idle), then class
+        # declaration order for equal-speed classes (spot before on-demand
+        # in a cloud fleet), then the homogeneous tie-break: most free
+        # slots, then node index.  This is the wave model's class-ordered
+        # allocation rule — what keeps the two simulators in agreement on
+        # contention-free cases.
         order = sorted(range(n_nodes),
-                       key=lambda nd: (nd == prefer_not, -speed[nd], -slots[nd]))
+                       key=lambda nd: (nd == prefer_not, -speed[nd],
+                                       is_extra[nd], cls_idx[nd], -slots[nd]))
         for nd in order:
             if slots[nd] > 0:
                 return nd
@@ -475,6 +590,43 @@ def simulate_workload(
                 if not launch(j, kind, pend[0], now):
                     break
                 pend.popleft()
+
+    # ---------------- autoscaler (elastic fleets) ----------------
+
+    def unmet_demand() -> int:
+        """Queued tasks the cluster has no slot for right now — pending maps
+        of arrived jobs plus pending reduces past slowstart (the wave
+        model's trigger signal, evaluated at the same post-allocation
+        points, which is what lets the two simulators agree on *when* the
+        autoscaler acts)."""
+        q = 0
+        for j in jobs:
+            if not j.arrived:
+                continue
+            q += len(j.pending_maps)
+            if j.reducers_launched:
+                q += len(j.pending_reduces)
+        return q
+
+    def autoscale_check(now: float) -> None:
+        nonlocal extra_online, extra_pending
+        if not scaling:
+            return
+        q = unmet_demand()
+        if (el_policy == 1 and not extra_online and not extra_pending
+                and q > el_high + _EPS):
+            extra_pending = True
+            push(now + el_lat, 1, "provision", 0)
+        if extra_online and q == 0 and all(
+                map_slots[nd] == cap_map[nd] and red_slots[nd] == cap_red[nd]
+                for nd in range(n_base, n_nodes)):
+            # nothing queued and every extra node idle: release the block
+            # (one billing episode per provision/teardown cycle)
+            for nd in range(n_base, n_nodes):
+                set_offline(nd, now)
+                map_slots[nd] = red_slots[nd] = 0
+                cap_map[nd] = cap_red[nd] = 0
+            extra_online = False
 
     def maybe_speculate(now: float) -> None:
         if not sim.speculative_execution:
@@ -613,11 +765,16 @@ def simulate_workload(
             else:
                 starved_since[kind] = None
 
-    # ---------------- failures ----------------
+    # ---------------- failures / spot reclamations ----------------
 
-    def fail_node(fnode: int, ftime: float) -> None:
+    def evict_node(enode: int, etime: float, reason: str) -> int:
+        """Take a node out of service: kill its running tasks (requeued,
+        recorded with ``kill_reason=reason``), resurrect completed map
+        outputs unfinished jobs still need, zero its capacity and close its
+        online episode.  Returns the number of tasks + outputs affected."""
+        n_lost = 0
         for uid, (jid, kind, index, node, start, end, spec) in list(running.items()):
-            if node != fnode:
+            if node != enode:
                 continue
             del running[uid]
             j = by_id[jid]
@@ -635,25 +792,30 @@ def simulate_workload(
                         and index not in j.pending_reduces):
                     j.pending_reduces.append(index)
             res.records.append(
-                ClusterTaskRecord(jid, kind, index, node, start, ftime,
-                                  spec, killed=True, kill_reason="failure"))
-            res.num_failure_reruns += 1
-        # Completed map outputs on the failed node are lost for every job
+                ClusterTaskRecord(jid, kind, index, node, start, etime,
+                                  spec, killed=True, kill_reason=reason))
+            n_lost += 1
+        # Completed map outputs on the evicted node are lost for every job
         # whose reducers still need them.
         for j in jobs:
             if len(j.completed_reduces) >= j.n_reds:
                 continue
             for midx, mnode in list(j.map_output_node.items()):
-                if mnode == fnode and midx in j.completed_maps:
+                if mnode == enode and midx in j.completed_maps:
                     j.completed_maps.discard(midx)
                     del j.map_output_node[midx]
                     if midx not in j.pending_maps:
                         j.pending_maps.append(midx)
-                    res.num_failure_reruns += 1
-        map_slots[fnode] = 0
-        red_slots[fnode] = 0
-        cap_map[fnode] = 0
-        cap_red[fnode] = 0
+                    n_lost += 1
+        map_slots[enode] = 0
+        red_slots[enode] = 0
+        cap_map[enode] = 0
+        cap_red[enode] = 0
+        set_offline(enode, etime)
+        return n_lost
+
+    def fail_node(fnode: int, ftime: float) -> None:
+        res.num_failure_reruns += evict_node(fnode, ftime, "failure")
         fail_time[fnode] = min(fail_time[fnode], ftime)
 
     def finish_job(job: _Job, now: float) -> None:
@@ -662,7 +824,14 @@ def simulate_workload(
 
     # ---------------- event loop ----------------
 
+    n_popped = 0
     while events:
+        if n_popped >= _MAX_EVENTS:
+            # pathological elastic configs (a reclaim rate so high tasks
+            # never survive an online window) would cycle reclaim/replace
+            # events forever — bail and let n_unfinished flag the run
+            break
+        n_popped += 1
         t, oc, _seq, tag, payload = heapq.heappop(events)
         clock = max(clock, t)
 
@@ -670,12 +839,53 @@ def simulate_workload(
             fail_node(payload, t)
             fill_slots(clock)
             check_preempt(clock)
+            autoscale_check(clock)
             continue
 
         if tag == "arrive":
             by_id[payload].arrived = True
             fill_slots(clock)
             check_preempt(clock)
+            autoscale_check(clock)
+            continue
+
+        if tag == "reclaim":
+            nd = payload
+            if (workload_done() or online_from[nd] is None
+                    or fail_time[nd] != _INF):
+                continue                 # node already gone, or nothing left
+            res.num_reclaimed += evict_node(nd, t, "reclaim")
+            push(t + el_lat, 1, "replace", nd)
+            fill_slots(clock)
+            check_preempt(clock)
+            autoscale_check(clock)
+            continue
+
+        if tag == "replace":
+            nd = payload
+            if workload_done() or fail_time[nd] != _INF:
+                continue                 # nobody pays for capacity after
+            map_slots[nd] = cap_map[nd] = cluster.map_slots_per_node
+            red_slots[nd] = cap_red[nd] = cluster.reduce_slots_per_node
+            online_from[nd] = t
+            push(t + rng_reclaim.expovariate(el_rate), 0, "reclaim", nd)
+            fill_slots(clock)
+            check_preempt(clock)
+            autoscale_check(clock)
+            continue
+
+        if tag == "provision":
+            extra_pending = False
+            if workload_done():
+                continue
+            extra_online = True
+            for nd in range(n_base, n_nodes):
+                map_slots[nd] = cap_map[nd] = cluster.map_slots_per_node
+                red_slots[nd] = cap_red[nd] = cluster.reduce_slots_per_node
+                online_from[nd] = t
+            fill_slots(clock)
+            check_preempt(clock)
+            autoscale_check(clock)
             continue
 
         if tag == "preempt":
@@ -764,6 +974,7 @@ def simulate_workload(
             finish_job(job, clock)
 
         check_preempt(clock)
+        autoscale_check(clock)
         res.makespan = max(res.makespan, clock)
 
     # ---------------- completion / slot-occupancy summary ----------------
@@ -778,12 +989,18 @@ def simulate_workload(
     for rec in res.records:
         res.node_busy_s[rec.node] += rec.end - rec.start
     span = res.makespan
-    # capacity integrated over time: a failed node only contributes slot-
-    # seconds up to its failure (the old denominator charged dead nodes for
-    # the whole makespan, under-reporting utilization on failure runs)
+    for nd in range(n_nodes):        # close live capacity episodes at span
+        set_offline(nd, span)
+    res.node_online = node_online
+    # capacity integrated over online time: a failed node only contributes
+    # slot-seconds up to its failure, a reclaimed/autoscaled node only over
+    # its online episodes (for a fixed fleet this reduces to the previous
+    # min(span, fail_time) denominator exactly)
     per_node = cluster.map_slots_per_node + cluster.reduce_slots_per_node
-    slot_seconds = sum(per_node * min(span, fail_time[nd])
-                       for nd in range(n_nodes))
+    slot_seconds = sum(
+        per_node * sum(max(0.0, min(e, span) - max(s, 0.0))
+                       for s, e in node_online[nd])
+        for nd in range(n_nodes))
     if slot_seconds > 0:
         res.slot_utilization = sum(res.node_busy_s) / slot_seconds
     ob = _obs_current()
@@ -794,6 +1011,7 @@ def simulate_workload(
         reg.counter("des.tasks").inc(len(res.records))
         reg.counter("des.preempted").inc(res.num_preempted)
         reg.counter("des.failure_reruns").inc(res.num_failure_reruns)
+        reg.counter("des.reclaimed").inc(res.num_reclaimed)
         reg.counter("des.speculative_launched").inc(
             res.num_speculative_launched)
         reg.histogram("des.makespan_s").record(res.makespan)

@@ -59,6 +59,28 @@ a ``fair`` (B,) column is accepted as ``policy``, 1-D ``map_slots`` /
 (classes are re-sorted fastest-first), ``queue`` / ``queue_frac`` default
 to a single queue.
 
+**Elastic fleets** (:mod:`repro.cloud`) add optional columns, all
+defaulting to the fixed-fleet zero:
+
+  autoscale (B,)          0 = off, 1 = queue-depth, 2 = predicted-load
+  high_water (B,)         unmet-task trigger threshold (queue policy)
+  provision_latency (B,)  request -> schedulable seconds
+  extra_map_slots (B,)    autoscaled capacity block (joins the LAST class)
+  extra_red_slots (B,)
+  billing_quantum (B,)    minimum billed seconds per capacity episode
+  reclaim_rate (B, C)     spot reclaims per node-second, per class
+
+Fleet size becomes a per-round dynamic column: the extra block turns on
+one provisioning latency after its trigger and turns off at the first
+event where nothing is queued and the block is idle; its billed seconds
+(episodes rounded up to the billing quantum) come back as
+``extra_billed_s``.  Spot reclamation enters in expectation: a class with
+reclaim rate λ runs its task of length d in ``(e^{λd} - 1)/λ`` expected
+seconds (restart-from-scratch under a Poisson reclaim process) — the DES
+realizes actual reclaim draws and is the exact reference, so agreement on
+reclaiming workloads is gated at the p95 level, not per-job (the PR 5
+contract: contention-free autoscaled cases stay rtol-exact).
+
 Use :func:`pack_trace` to turn a :class:`~repro.cluster.workload.
 WorkloadTrace` into per-job columns, and :func:`estimate_steps` to bound
 the scan length (truncated scenarios report ``converged == 0``, which the
@@ -81,7 +103,8 @@ from repro.obs import current as _obs_current
 
 from .workload import WorkloadTrace, shuffle_full, task_costs
 
-__all__ = ["POLICIES", "pack_trace", "estimate_steps", "simulate_batch"]
+__all__ = ["POLICIES", "latency_quantile", "pack_trace", "estimate_steps",
+           "simulate_batch"]
 
 _EPS = 1e-3          # event-time / task-count slack (durations are >= ~0.1 s)
 _INF = jnp.inf
@@ -132,6 +155,12 @@ def estimate_steps(scen: Mapping[str, np.ndarray], *, margin: float = 2.0
         margin = margin * 2.0
     n_jobs = scen["arrival"].shape[-1]
     est = int(np.max(waves) * margin) + n_jobs + 8
+    if (np.any(np.asarray(scen.get("autoscale", 0.0)) > 0.5)
+            or np.any(np.asarray(scen.get("extra_map_slots", 0.0)) > 0)):
+        # elastic rows add provision/teardown events (the queue policy can
+        # cycle once per burst) — waves above were counted on base slots
+        # only, so this is the only extra headroom needed
+        est += n_jobs + 8
     return 1 << (est - 1).bit_length()
 
 
@@ -200,13 +229,47 @@ def _take_rev(amount, buckets):
     return take[:, ::-1]
 
 
+def _quantize(dur, quantum):
+    """Round a billing episode up to the minimum billing granularity
+    (0 = per-second billing).  Double-where so quantum 0 never divides."""
+    q_safe = jnp.where(quantum > 0, quantum, 1.0)
+    return jnp.where(quantum > 0, jnp.ceil(dur / q_safe) * q_safe, dur)
+
+
+def latency_quantile(values, q: float):
+    """Linear-interpolated quantile of a 1-D array — the JAX twin of
+    :func:`repro.obs.percentile_interp`, the repo's one percentile rule,
+    with the same small-sample semantics: empty -> 0, one sample -> that
+    sample for every ``q``, integral ranks return the order statistic
+    exactly, and equal neighbours (both inf included) return the common
+    value.  ``WorkloadResult.latency_quantile`` is the DES-side twin."""
+    v = jnp.sort(jnp.ravel(jnp.asarray(values)))
+    n = v.shape[0]
+    if n == 0:
+        return jnp.zeros((), dtype=jnp.result_type(float))
+    if n == 1:
+        return v[0]
+    rank = jnp.clip(jnp.asarray(q, dtype=v.dtype), 0.0, 100.0) \
+        / 100.0 * (n - 1)
+    lo = jnp.floor(rank).astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, n - 1)
+    frac = rank - lo.astype(v.dtype)
+    a, b = v[lo], v[hi]
+    # double-where (the PR 7 inf guard): when the neighbours agree or the
+    # rank is integral the answer is ``a`` — never compute ``b - a`` there,
+    # because with infinite neighbours that difference is inf - inf = nan
+    same = (frac <= 0.0) | (a == b)
+    delta = jnp.where(same, 0.0, b - a)
+    return jnp.where(same, a, a + delta * frac)
+
+
 # --------------------------------------------------------------------------
 # core rollout (single scenario; vmapped + sharded below)
 # --------------------------------------------------------------------------
 
 
 def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
-             with_capacity: bool) -> dict:
+             with_capacity: bool, with_cloud: bool = False) -> dict:
     arrival = s["arrival"]
     n_maps = s["n_maps"]
     n_reds = s["n_reds"]
@@ -223,6 +286,33 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
     # per-class task durations: compute scales with the class, network not
     map_dur = map_cost[:, None] / speedup[None, :]            # (J, C)
     red_dur = s["shuffle"][:, None] + s["red_work"][:, None] / speedup[None, :]
+    if with_cloud:
+        # spot reclamation in expectation: restart-from-scratch under a
+        # Poisson(λ) reclaim process makes a length-d task take
+        # (e^{λd} - 1)/λ expected seconds (-> d as λ -> 0); stalled-reduce
+        # resolution keeps the uninflated work term — reclaim rates sane
+        # enough to converge make that correction second-order.  Double-
+        # where so λ = 0 classes never divide by zero.
+        rate = jnp.maximum(s["reclaim_rate"], 0.0)            # (C,)
+        rate_safe = jnp.where(rate > 0, rate, 1.0)
+
+        def inflate(d):
+            return jnp.where(
+                rate[None, :] > 0,
+                jnp.expm1(rate_safe[None, :] * d) / rate_safe[None, :], d)
+
+        map_dur = inflate(map_dur)
+        red_dur = inflate(red_dur)
+        x_policy = s["autoscale"]
+        high_water = s["high_water"]
+        x_lat = s["provision_latency"]
+        x_m = s["extra_map_slots"]
+        x_r = s["extra_red_slots"]
+        x_quant = s["billing_quantum"]
+        have_extra = (x_m + x_r) > _EPS
+        # the autoscaled block joins the LAST class column: extra capacity
+        # clones the baseline (slowest) class, the DES's rule
+        onehot_last = (jnp.arange(C) == C - 1).astype(arrival.dtype)
     if with_capacity:
         qf = s["queue_frac"]
         onehot = (jnp.round(s["queue"])[:, None]
@@ -256,10 +346,38 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
         map_fin=jnp.full_like(arrival, _INF),
         fin=jnp.full_like(arrival, _INF),
     )
+    if with_cloud:
+        # predicted-load provisions up front: extra capacity is requested
+        # the moment the workload starts (x_at = first arrival + latency);
+        # the queue policy arms x_at when the trigger fires mid-run
+        state0.update(
+            x_on=jnp.zeros((), arrival.dtype),
+            x_at=jnp.where((x_policy > 1.5) & have_extra,
+                           arrival.min() + x_lat,
+                           jnp.asarray(_INF, arrival.dtype)),
+            x_t_on=jnp.asarray(_INF, arrival.dtype),
+            x_billed=jnp.zeros((), arrival.dtype),
+        )
 
     def step(st):
         t = st["t"]
         arrived = arrival <= t + _EPS
+
+        if with_cloud:
+            # pending provisioning lands: the block comes online for this
+            # round's allocation, one episode (x_t_on) starts billing
+            turn_on = (st["x_at"] <= t + _EPS) & (st["x_on"] < 0.5)
+            x_on = jnp.where(turn_on, 1.0, st["x_on"])
+            x_at = jnp.where(turn_on, _INF, st["x_at"])
+            x_t_on = jnp.where(turn_on, t, st["x_t_on"])
+            x_billed = st["x_billed"]
+            map_slots_t = map_slots + x_on * x_m * onehot_last
+            red_slots_t = red_slots + x_on * x_r * onehot_last
+            cap_m_t = cap_m + x_on * x_m
+            cap_r_t = cap_r + x_on * x_r
+        else:
+            map_slots_t, red_slots_t = map_slots, red_slots
+            cap_m_t, cap_r_t = cap_m, cap_r
 
         # (a) wave buckets due now complete (per job x class)
         m_done_now = (st["m_run"] > _EPS) & (st["m_end"] <= t + _EPS)
@@ -301,7 +419,7 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
         m_demand = jnp.where(arrived & (m_todo > _EPS), m_todo, 0.0)
         if with_preempt:
             preempt = policy > 1.5
-            target = target_alloc(m_demand + m_run.sum(-1), cap_m)
+            target = target_alloc(m_demand + m_run.sum(-1), cap_m_t)
             kill = jnp.where(preempt,
                              jnp.clip(m_run.sum(-1) - target, 0.0, None), 0.0)
             kill_c = _take_rev(kill, m_run)
@@ -309,13 +427,13 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
             m_todo = m_todo + kill_c.sum(-1)     # killed work re-runs fully
             m_end = jnp.where(m_run > _EPS, m_end, _INF)
             m_demand = jnp.where(arrived & (m_todo > _EPS), m_todo, 0.0)
-            free_m = map_slots - m_run.sum(0)
+            free_m = map_slots_t - m_run.sum(0)
             alloc = jnp.where(
                 preempt,
                 jnp.clip(target - m_run.sum(-1), 0.0, m_demand),
                 alloc_free(m_demand, free_m))
         else:
-            free_m = map_slots - m_run.sum(0)
+            free_m = map_slots_t - m_run.sum(0)
             alloc = alloc_free(m_demand, free_m)
         k_m = _by_class(alloc, free_m)
         launched = k_m > _EPS
@@ -331,7 +449,7 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
                              r_todo, 0.0)
         if with_preempt:
             run_tot = r_run.sum(-1) + r_pre.sum(-1)
-            target = target_alloc(r_demand + run_tot, cap_r)
+            target = target_alloc(r_demand + run_tot, cap_r_t)
             kill = jnp.where(preempt, jnp.clip(run_tot - target, 0.0, None),
                              0.0)
             take_pre = _take_rev(kill, r_pre)      # stalled buckets first
@@ -343,14 +461,14 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
             r_end = jnp.where(r_run > _EPS, r_end, _INF)
             r_demand = jnp.where((red_launch <= t + _EPS) & (r_todo > _EPS),
                                  r_todo, 0.0)
-            free_r = red_slots - r_run.sum(0) - r_pre.sum(0)
+            free_r = red_slots_t - r_run.sum(0) - r_pre.sum(0)
             alloc_r = jnp.where(
                 preempt,
                 jnp.clip(target - r_run.sum(-1) - r_pre.sum(-1), 0.0,
                          r_demand),
                 alloc_free(r_demand, free_r))
         else:
-            free_r = red_slots - r_run.sum(0) - r_pre.sum(0)
+            free_r = red_slots_t - r_run.sum(0) - r_pre.sum(0)
             alloc_r = alloc_free(r_demand, free_r)
         k_r = _by_class(alloc_r, free_r)
         launched_r = k_r > _EPS
@@ -365,16 +483,42 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
         r_pre_start = jnp.where(pre, jnp.minimum(r_pre_start, t), r_pre_start)
         r_todo = r_todo - k_r.sum(-1)
 
-        # (e) advance to the next event (freeze once none remain)
+        # (e) autoscaler trigger / teardown (post-allocation, the DES's
+        # evaluation points), then advance to the next event
+        if with_cloud:
+            unmet = (jnp.where(arrived, m_todo, 0.0).sum()
+                     + jnp.where(red_launch <= t + _EPS, r_todo, 0.0).sum())
+            trigger = ((x_policy > 0.5) & (x_policy < 1.5) & have_extra
+                       & (unmet > high_water + _EPS)
+                       & (x_on < 0.5) & jnp.isinf(x_at))
+            x_at = jnp.where(trigger, t + x_lat, x_at)
+            # teardown: nothing queued and the whole block idle (free slots
+            # in its class cover it) -> close the billing episode.  The
+            # queue policy re-arms on a later burst (x_at back to inf).
+            free_m_now = map_slots_t - m_run.sum(0)
+            free_r_now = red_slots_t - r_run.sum(0) - r_pre.sum(0)
+            drop = ((x_on > 0.5) & (unmet <= _EPS)
+                    & (free_m_now[-1] >= x_m - _EPS)
+                    & (free_r_now[-1] >= x_r - _EPS))
+            ep = t - jnp.where(x_on > 0.5, x_t_on, t)   # 0 when off, no inf
+            x_billed = x_billed + jnp.where(drop, _quantize(ep, x_quant), 0.0)
+            x_on = jnp.where(drop, 0.0, x_on)
+            x_t_on = jnp.where(drop, _INF, x_t_on)
+
         t_next = jnp.minimum(
             jnp.where(arrival > t + _EPS, arrival, _INF).min(),
             jnp.minimum(m_end.min(), r_end.min()))
+        if with_cloud:
+            t_next = jnp.minimum(t_next, x_at)
         t_new = jnp.where(jnp.isfinite(t_next), t_next, t)
 
-        return dict(k=st["k"] + 1, t=t_new, m_todo=m_todo, m_run=m_run,
-                    m_end=m_end, r_todo=r_todo, r_run=r_run, r_end=r_end,
-                    r_pre=r_pre, r_pre_start=r_pre_start,
-                    red_launch=red_launch, map_fin=map_fin, fin=fin)
+        nxt = dict(k=st["k"] + 1, t=t_new, m_todo=m_todo, m_run=m_run,
+                   m_end=m_end, r_todo=r_todo, r_run=r_run, r_end=r_end,
+                   r_pre=r_pre, r_pre_start=r_pre_start,
+                   red_launch=red_launch, map_fin=map_fin, fin=fin)
+        if with_cloud:
+            nxt.update(x_on=x_on, x_at=x_at, x_t_on=x_t_on, x_billed=x_billed)
+        return nxt
 
     def cont(st):
         # stop at the last event — a frozen scenario pays no further steps
@@ -392,27 +536,45 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
     # = nan.  Double-where: the percentile only ever sees finite values, and
     # unconverged scenarios report inf — the same sentinel `finish` uses.
     lat_safe = jnp.where(jnp.isfinite(latency), latency, 0.0)
-    return dict(
+    out = dict(
         finish=fin,
         map_finish=st["map_fin"],
         latency=latency,
         converged=converged.astype(jnp.float32),
         mean_latency=latency.mean(),
         p95_latency=jnp.where(
-            converged, jnp.percentile(lat_safe, 95.0), jnp.inf),
+            converged, latency_quantile(lat_safe, 95.0), jnp.inf),
         makespan=span,
         utilization=busy / (span * jnp.maximum(cap_m + cap_r, 1.0)),
     )
+    if with_cloud:
+        # close a still-open extra-capacity episode at the last finish (the
+        # DES closes live online intervals at span the same way); inf for
+        # unconverged rows, whose billed seconds are as unknown as their
+        # finish times
+        x_open = st["x_on"] > 0.5
+        fin_max = fin.max()
+        # double-where: an unconverged row has inf finish times (and an
+        # open episode keeps x_t_on), so the subtraction only ever sees
+        # finite operands; the result is overridden to inf below anyway
+        end_safe = jnp.where(jnp.isfinite(fin_max), fin_max, 0.0)
+        start_safe = jnp.where(jnp.isfinite(st["x_t_on"]), st["x_t_on"], 0.0)
+        ep = jnp.where(x_open, jnp.maximum(end_safe - start_safe, 0.0), 0.0)
+        billed = st["x_billed"] + jnp.where(x_open, _quantize(ep, x_quant),
+                                            0.0)
+        out["extra_billed_s"] = jnp.where(converged, billed, jnp.inf)
+    return out
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled(devs: tuple, n_steps: int, with_fair: bool, with_preempt: bool,
-              with_capacity: bool):
+              with_capacity: bool, with_cloud: bool = False):
     mesh = compat.make_mesh(list(devs), axis="search")
 
     def per_device(scen):
         return jax.vmap(lambda s: _sim_one(
-            s, n_steps, with_fair, with_preempt, with_capacity))(scen)
+            s, n_steps, with_fair, with_preempt, with_capacity,
+            with_cloud))(scen)
 
     return jax.jit(compat.shard_map(
         per_device, mesh=mesh, in_specs=(P("search"),),
@@ -436,8 +598,23 @@ def _normalize(scen: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
         arrs["speedup"] = np.ones_like(arrs["map_slots"])
     elif arrs["speedup"].ndim == 1:
         arrs["speedup"] = arrs["speedup"][:, None]
+    # elastic-fleet columns (repro.cloud): default to the fixed fleet.
+    # reclaim_rate is per class and must ride the fastest-first re-sort
+    # with the slot columns; a 1-D rate applies to every class.
+    if "reclaim_rate" not in arrs:
+        arrs["reclaim_rate"] = np.zeros(arrs["map_slots"].shape,
+                                        dtype=np.float64)
+    else:
+        rr = np.asarray(arrs["reclaim_rate"], dtype=np.float64)
+        if rr.ndim == 1:
+            rr = np.repeat(rr[:, None], arrs["map_slots"].shape[1], axis=1)
+        arrs["reclaim_rate"] = rr
+    for k in ("autoscale", "high_water", "provision_latency",
+              "extra_map_slots", "extra_red_slots", "billing_quantum"):
+        if k not in arrs:
+            arrs[k] = np.zeros(b, dtype=np.float64)
     order = np.argsort(-arrs["speedup"], axis=1, kind="stable")
-    for k in ("speedup", "map_slots", "red_slots"):
+    for k in ("speedup", "map_slots", "red_slots", "reclaim_rate"):
         arrs[k] = np.take_along_axis(arrs[k], order, axis=1)
     if "queue" not in arrs:
         arrs["queue"] = np.zeros_like(arrs["arrival"])
@@ -485,12 +662,16 @@ def simulate_batch(
     with_fair = bool(np.any(pol > 0.5))
     with_preempt = bool(np.any(pol > 1.5))
     with_capacity = bool(np.any(pol > 2.5))
+    with_cloud = bool(np.any(arrs["autoscale"] > 0.5)
+                      or np.any(arrs["extra_map_slots"] > 0)
+                      or np.any(arrs["extra_red_slots"] > 0)
+                      or np.any(arrs["reclaim_rate"] > 0))
     ob = _obs_current()
     with ob.tracer.span("vector_sim.simulate_batch", scenarios=b,
                         n_steps=n_steps):
         pre = _compiled.cache_info().misses if ob.enabled else 0
         out = _compiled(devs, n_steps, with_fair, with_preempt,
-                        with_capacity)(arrs)
+                        with_capacity, with_cloud)(arrs)
     if ob.enabled:
         reg = ob.registry
         reg.counter("vector_sim.batches").inc()

@@ -13,10 +13,16 @@ as Chrome trace events on a **virtual-time** clock (1 simulated second =
   proportional to the job class's §2-§3 per-phase costs; reduces show the
   recorded ``network`` shuffle transfer (overlapping the job's maps) then
   ``shuffle / reduce_merge / reduce_write`` carved from the §4 costs;
-* kills are instants (``preempt`` / ``failure`` / ``superseded``) at the
-  kill time; speculative copies are flagged in the span args;
+* kills are instants (``preempt`` / ``failure`` / ``superseded`` /
+  ``reclaim``) at the kill time — a spot reclamation renders under its
+  own name, distinct from a scheduler preemption or a node failure;
+  speculative copies are flagged in the span args;
 * a "jobs" process holds one lane per job (``queued`` then ``running``),
-  and a ``cluster`` counter track plots running maps/reduces over time.
+  and a ``cluster`` counter track plots running maps/reduces over time;
+* elastic/priced fleets (:mod:`repro.cloud`) add per-node
+  ``provisioned`` / ``offline`` instants at capacity-episode boundaries
+  plus ``fleet`` (online nodes) and ``spend`` (cumulative dollars)
+  counter tracks swept from ``WorkloadResult.node_online``.
 
 Pure host-side post-processing: reads the result's records, touches no jax.
 """
@@ -101,7 +107,8 @@ def workload_trace(trace, result, cluster, *, tracer: Tracer | None = None
             tracer = Tracer()
 
     klass_of = {a.job_id: a.klass for a in trace.arrivals}
-    n_nodes = max(1, cluster.num_nodes)
+    # autoscaled extras live past cluster.num_nodes in node_online order
+    n_nodes = max(1, cluster.num_nodes, len(result.node_online))
     for nd in range(n_nodes):
         tracer.process_name(_PID_NODE0 + nd, f"node {nd}")
     tracer.process_name(_PID_JOBS, "jobs")
@@ -195,4 +202,44 @@ def workload_trace(trace, result, cluster, *, tracer: Tracer | None = None
         r += dr
         tracer.counter("cluster running", ts=t * SIM_SECOND_US,
                        pid=_PID_JOBS, maps=m, reduces=r)
+
+    # ---- elastic fleet: capacity episodes, fleet-size + spend tracks ----
+    episodes = result.node_online
+    table = cluster.node_table()
+    priced = any(row[2] > 0 for row in table)
+    elastic = (len(episodes) > len(table)
+               or any(len(eps) != 1 for eps in episodes)
+               or any(s > 0 for eps in episodes for s, _ in eps))
+    if episodes and (priced or elastic):
+        span = result.makespan
+        # extras (nodes past the base table) clone the slowest class
+        extra_price = table[-1][2] if table else 0.0
+        events: list[tuple[float, int, float]] = []
+        for nd, eps in enumerate(episodes):
+            price = table[nd][2] if nd < len(table) else extra_price
+            is_extra = nd >= len(table)
+            for s0, e0 in eps:
+                events.append((s0, 1, price))
+                events.append((e0, -1, price))
+                if s0 > 0:     # replacement or autoscale provision
+                    tracer.instant("provisioned", ts=s0 * SIM_SECOND_US,
+                                   pid=_PID_NODE0 + nd, tid=0, node=nd,
+                                   extra=int(is_extra))
+                if e0 < span - 1e-9:   # reclaim/failure/teardown, not EOS
+                    tracer.instant("offline", ts=e0 * SIM_SECOND_US,
+                                   pid=_PID_NODE0 + nd, tid=0, node=nd,
+                                   extra=int(is_extra))
+        events.sort()
+        online, rate, spent = 0, 0.0, 0.0
+        t_prev = 0.0
+        for t, d, price in events:
+            spent += rate * max(t - t_prev, 0.0)
+            online += d
+            rate += d * price / 3600.0
+            t_prev = t
+            tracer.counter("fleet", ts=t * SIM_SECOND_US, pid=_PID_JOBS,
+                           online_nodes=online)
+            if priced:
+                tracer.counter("spend", ts=t * SIM_SECOND_US, pid=_PID_JOBS,
+                               dollars=spent)
     return tracer

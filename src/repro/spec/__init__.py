@@ -34,6 +34,7 @@ from .report import (
     CalibrationReport,
     CostReport,
     PhaseBreakdown,
+    ProvisioningReport,
     invalid_reason_counts,
     invalid_reasons,
 )
@@ -47,6 +48,7 @@ __all__ = [
     "PhaseBreakdown",
     "CostReport",
     "CalibrationReport",
+    "ProvisioningReport",
     "PHASES",
     "VALIDITY_CONSTRAINTS",
     "invalid_reason_counts",

@@ -38,6 +38,7 @@ __all__ = [
     "PhaseBreakdown",
     "CostReport",
     "CalibrationReport",
+    "ProvisioningReport",
     "PHASES",
     "VALIDITY_CONSTRAINTS",
     "invalid_reason_counts",
@@ -236,6 +237,41 @@ class CostReport:
 
 
 @dataclass(frozen=True)
+class ProvisioningReport:
+    """Typed view of one (or a batch of) priced-fleet evaluation(s).
+
+    The :class:`CostReport` of the economic layer
+    (:class:`repro.cloud.CloudEvaluator`): dollars and SLO attainment
+    instead of per-phase seconds.  Every leaf is an array and the class is
+    a registered pytree — a batched report has ``(B,)`` columns, vmaps,
+    and ships through jit like any output dict.
+    """
+
+    dollars_per_job: object      # workload bill / jobs served ($/job)
+    dollar_makespan: object      # the whole workload's bill ($)
+    slo_attainment: object       # fraction of jobs with latency <= sloLatency
+    mean_latency: object         # seconds (submit -> finish)
+    p95_latency: object          # seconds (latency_quantile(95) rule)
+    utilization: object          # busy slot-seconds / online slot-seconds
+    valid: object                # axis mask & simulator convergence
+
+    @classmethod
+    def from_outputs(cls, outputs: Mapping[str, object]
+                     ) -> "ProvisioningReport":
+        """Lift a :meth:`repro.cloud.CloudEvaluator.evaluate` output dict
+        (the ``c_*`` columns) into the typed view, leaves by reference."""
+        return cls(
+            dollars_per_job=outputs["c_dollarsPerJob"],
+            dollar_makespan=outputs["c_dollarMakespan"],
+            slo_attainment=outputs["c_sloAttain"],
+            mean_latency=outputs["c_meanLat"],
+            p95_latency=outputs["c_p95Lat"],
+            utilization=outputs["c_util"],
+            valid=outputs["valid"],
+        )
+
+
+@dataclass(frozen=True)
 class CalibrationReport:
     """Result of one gradient-calibration run (:mod:`repro.calib`).
 
@@ -348,3 +384,4 @@ def _register_struct(cls):
 
 _register_struct(PhaseBreakdown)
 _register_struct(CostReport)
+_register_struct(ProvisioningReport)

@@ -71,6 +71,23 @@ def test_tpu_axis_names_frozen(manifest):
     assert list(TPU_AXIS_NAMES) == manifest["axes"]["tpu"]
 
 
+def test_cloud_exports_frozen(manifest):
+    import repro.cloud as cloud
+
+    assert sorted(cloud.__all__) == manifest["repro.cloud"], (
+        "repro.cloud.__all__ drifted from manifest.json — the elastic "
+        "provisioning surface is frozen; update the manifest deliberately"
+    )
+    for name in cloud.__all__:
+        assert getattr(cloud, name, None) is not None, name
+
+
+def test_cloud_axis_names_frozen(manifest):
+    from repro.cloud import cloud_space
+
+    assert list(cloud_space().names) == manifest["axes"]["cloud"]
+
+
 def test_registered_backends_cover_the_manifest_spaces(manifest):
     import repro.api as api
 

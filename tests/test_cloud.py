@@ -1,0 +1,392 @@
+"""repro.cloud — priced fleets, spot reclamation, autoscaling, $-search."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cloud import (
+    AUTOSCALE_POLICIES,
+    CloudEvaluator,
+    ElasticFleet,
+    SloUnmetError,
+    bill_workload,
+    cloud_space,
+    dollars_for,
+    pareto_front,
+    spot_inflation,
+    wave_columns,
+)
+from repro.cluster import (
+    ClusterConfig,
+    NodeClass,
+    default_job_classes,
+    latency_quantile,
+    pack_trace,
+    poisson_trace,
+    rescale,
+    simulate_batch,
+    simulate_workload,
+)
+from repro.cluster.workload import _PROFILES
+from repro.core.hadoop.simulator import SimConfig
+from repro.obs import percentile_interp
+from repro.spec import ProvisioningReport
+
+CLEAN = SimConfig(speculative_execution=False)
+PRICE = 0.36
+
+
+# ---------------------------------------------------------------- pricing
+
+
+def test_spot_inflation_semantics():
+    # rate 0 (on-demand) is exactly 1; positive rates inflate monotonically
+    assert float(spot_inflation(0.0, 30.0)) == 1.0
+    lo = float(spot_inflation(1e-4, 30.0))
+    hi = float(spot_inflation(1e-2, 30.0))
+    assert 1.0 < lo < hi
+    # the closed form: E[wall] = (e^{lam d} - 1) / lam
+    lam, d = 3e-3, 45.0
+    assert np.isclose(float(spot_inflation(lam, d)) * d,
+                      np.expm1(lam * d) / lam, rtol=1e-12)
+    # the double-where guard: grad is finite across the rate=0 boundary
+    g = jax.grad(lambda r: spot_inflation(r, 30.0))(0.0)
+    assert np.isfinite(float(g))
+
+
+def test_dollars_for_quantum_and_grad():
+    # 2 nodes x $0.30/h for 30 min = $0.30
+    assert np.isclose(float(dollars_for(1800.0, [2.0], [0.30])), 0.30,
+                      rtol=1e-12)
+    # hour-granularity billing rounds the span up
+    assert np.isclose(
+        float(dollars_for(1800.0, [2.0], [0.30], billing_quantum=3600.0)),
+        0.60, rtol=1e-12)
+    # a concrete zero quantum keeps the path ceil-free and differentiable
+    g = jax.grad(lambda s: dollars_for(s, jnp.ones(2), jnp.full(2, 0.4)))(
+        1800.0)
+    assert np.isclose(float(g), 2 * 0.4 / 3600.0, rtol=1e-12)
+
+
+def test_elastic_fleet_validation():
+    assert ElasticFleet(policy="queue", max_extra_nodes=2).policy_code == 1
+    assert AUTOSCALE_POLICIES[0] == "off"
+    with pytest.raises(ValueError):
+        ElasticFleet(policy="bogus")
+    with pytest.raises(ValueError):
+        ElasticFleet(reclaim_rate=-1.0)
+    with pytest.raises(ValueError):
+        NodeClass(2, hourly_price=-0.1)
+
+
+def test_pareto_front_mask():
+    costs = np.array([1.0, 2.0, 3.0, 2.5, np.inf])
+    qual = np.array([5.0, 3.0, 1.0, 1.0, 0.0])
+    keep = pareto_front(costs, qual)
+    # (3.0, 1.0) dominates (inf, .) trivially; (2.5, 1.0) dominates (3.0, 1.0)
+    assert keep.tolist() == [True, True, False, True, False]
+
+
+# ---------------------------------------------- degenerate-pricing property
+
+
+@pytest.mark.parametrize("profile", sorted(_PROFILES))
+def test_degenerate_pricing_closed_form(profile):
+    """Zero spot, autoscaler off, zero provisioning latency: dollars_per_job
+    == makespan * fleet_size * hourly_price / n_jobs exactly, on both
+    simulator backends."""
+    classes = default_job_classes(names=[profile])
+    n_jobs, n, rate = 10, 4, 0.05
+    tr = poisson_trace(classes, n_jobs, seed=3)
+    ev = CloudEvaluator(classes, traces=[tr], base=ClusterConfig(num_nodes=n),
+                        base_rate=rate, on_demand_price=PRICE, sim=CLEAN,
+                        chunk=8)
+
+    # DES side: bill the recorded episodes of the same cluster exact_cost
+    # builds, against the closed form over its makespan
+    cc = ClusterConfig(num_nodes=n,
+                       node_classes=(NodeClass(n, 1.0, PRICE, spot=False),))
+    res = simulate_workload(rescale(tr, rate), cc, CLEAN)
+    want_des = res.makespan * n * PRICE / 3600.0 / n_jobs
+    assert np.isclose(ev.exact_cost({"pOnDemandNodes": n, "pSpotNodes": 0}),
+                      want_des, rtol=1e-12)
+    assert np.isclose(bill_workload(res, cc, window=(0.0, res.makespan)),
+                      want_des * n_jobs, rtol=1e-12)
+
+    # wave side: the evaluator's dollars against the closed form over the
+    # wave rollout's own makespan
+    cols = pack_trace(tr)
+    scen = {
+        "arrival": (cols["arrival"] / rate)[None, :],
+        "n_maps": cols["n_maps"][None, :],
+        "n_reds": cols["n_reds"][None, :],
+        "map_cost": cols["map_cost"][None, :],
+        "red_work": cols["red_work"][None, :],
+        "shuffle": (cols["shuffle"] * (n - 1) / n)[None, :],
+        "queue": cols["queue"][None, :],
+        "map_slots": np.array([float(n * cc.map_slots_per_node)]),
+        "red_slots": np.array([float(n * cc.reduce_slots_per_node)]),
+        "speedup": np.ones(1),
+        "policy": np.zeros(1),
+        "slowstart": np.array([cc.reduce_slowstart]),
+    }
+    span_w = float(np.asarray(simulate_batch(scen)["makespan"])[0])
+    r = ev.evaluate({"pOnDemandNodes": np.array([float(n)]),
+                     "pSpotNodes": np.array([0.0])})
+    want_wave = span_w * n * PRICE / 3600.0 / n_jobs
+    assert np.isclose(float(r.outputs["c_dollarsPerJob"][0]), want_wave,
+                      rtol=1e-12)
+    assert np.isclose(float(r.outputs["c_dollarMakespan"][0]),
+                      want_wave * n_jobs, rtol=1e-12)
+    assert r.outputs["valid"][0] == 1.0
+    assert r.outputs["c_sloAttain"][0] == 1.0
+
+
+# ------------------------------------------------------- percentile unification
+
+
+def test_latency_quantile_matches_percentile_interp():
+    rng = np.random.default_rng(0)
+    vals = np.sort(rng.exponential(10.0, size=23))
+    for q in (0.0, 12.5, 37.0, 50.0, 95.0, 100.0):
+        assert np.isclose(float(latency_quantile(jnp.asarray(vals), q)),
+                          percentile_interp(vals.tolist(), q), rtol=1e-12)
+        # and both match numpy's linear interpolation rule
+        assert np.isclose(percentile_interp(vals.tolist(), q),
+                          float(np.percentile(vals, q)), rtol=1e-9)
+    # small-sample rules
+    assert float(latency_quantile(jnp.asarray([7.5]), 95.0)) == 7.5
+    assert float(latency_quantile(jnp.zeros((0,)), 95.0)) == 0.0
+    # equal-neighbour interpolation between two infs would be inf - inf =
+    # nan without the double-where guard; it must report inf instead
+    inf_pair = jnp.asarray([1.0, jnp.inf, jnp.inf])
+    assert float(latency_quantile(inf_pair, 95.0)) == np.inf
+    assert not np.isnan(float(latency_quantile(inf_pair, 50.0)))
+    assert not np.isnan(float(latency_quantile(inf_pair, 25.0)))
+
+
+def test_workload_result_p95_uses_shared_rule():
+    classes = default_job_classes()
+    tr = poisson_trace(classes, 12, seed=5)
+    res = simulate_workload(rescale(tr, 0.1), ClusterConfig(num_nodes=4),
+                            CLEAN)
+    lats = np.sort(res.latencies())
+    assert np.isclose(res.p95_latency, percentile_interp(lats.tolist(), 95.0),
+                      rtol=1e-12)
+    assert np.isclose(res.latency_quantile(50.0),
+                      float(np.percentile(lats, 50.0)), rtol=1e-9)
+
+
+# ------------------------------------------------------------ DES elasticity
+
+
+def test_spot_reclaim_kills_and_requeues():
+    classes = default_job_classes()
+    tr = poisson_trace(classes, 8, seed=2)
+    cc = ClusterConfig(num_nodes=4, node_classes=(
+        NodeClass(2, 1.0, 0.10, spot=True), NodeClass(2, 1.0, 0.40)))
+    el = ElasticFleet(reclaim_rate=0.05, provision_latency=10.0, seed=1)
+    res = simulate_workload(rescale(tr, 0.1), cc, CLEAN, elastic=el)
+    assert res.n_unfinished == 0
+    assert res.num_reclaimed > 0
+    reasons = {r.kill_reason for r in res.records if r.killed}
+    assert "reclaim" in reasons
+    # reclaimed spot nodes cycle offline/online: multiple capacity episodes
+    assert any(len(eps) > 1 for eps in res.node_online[:2])
+    # on-demand nodes never reclaim: one episode covering the whole run
+    assert all(len(eps) == 1 for eps in res.node_online[2:4])
+
+
+def test_fixed_fleet_untouched_by_pricing_metadata():
+    # prices/spot flags without an elastic fleet replay bit-identically
+    classes = default_job_classes()
+    tr = rescale(poisson_trace(classes, 10, seed=4), 0.1)
+    plain = simulate_workload(tr, ClusterConfig(num_nodes=4), CLEAN)
+    priced = simulate_workload(
+        tr, ClusterConfig(num_nodes=4, node_classes=(
+            NodeClass(4, 1.0, PRICE, spot=True),)), CLEAN)
+    assert plain.makespan == priced.makespan
+    assert np.array_equal(plain.latencies(), priced.latencies())
+    assert priced.num_reclaimed == 0
+
+
+def test_autoscaler_queue_policy_adds_capacity():
+    classes = default_job_classes()
+    tr = rescale(poisson_trace(classes, 12, seed=6), 0.5)  # contended
+    cc = ClusterConfig(num_nodes=2)
+    el = ElasticFleet(policy="queue", max_extra_nodes=2, high_water=2.0,
+                      provision_latency=5.0)
+    fixed = simulate_workload(tr, cc, CLEAN)
+    scaled = simulate_workload(tr, cc, CLEAN, elastic=el)
+    assert scaled.n_unfinished == 0
+    # the extra nodes exist, came online after the provision latency, and
+    # record billable episodes
+    assert len(scaled.node_online) == 4
+    extra_eps = [e for eps in scaled.node_online[2:] for e in eps]
+    assert extra_eps and all(s >= el.provision_latency for s, _ in extra_eps)
+    assert scaled.makespan <= fixed.makespan + 1e-9
+    # some task actually ran on an autoscaled node
+    assert any(r.node >= 2 for r in scaled.records)
+
+
+def test_predicted_policy_provisions_up_front():
+    classes = default_job_classes()
+    tr = rescale(poisson_trace(classes, 8, seed=7), 0.5)
+    el = ElasticFleet(policy="predicted", max_extra_nodes=2,
+                      provision_latency=3.0)
+    res = simulate_workload(tr, ClusterConfig(num_nodes=2), CLEAN, elastic=el)
+    starts = [s for eps in res.node_online[2:] for s, _ in eps]
+    assert starts and np.isclose(min(starts), 3.0, atol=1e-9)
+
+
+# ------------------------------------------------------------- the evaluator
+
+
+def _small_ev(**kw):
+    classes = default_job_classes()
+    kw.setdefault("n_jobs", 8)
+    kw.setdefault("n_seeds", 1)
+    kw.setdefault("chunk", 8)
+    kw.setdefault("sim", CLEAN)
+    return CloudEvaluator(classes, **kw)
+
+
+def test_cloud_space_predicates():
+    ev = _small_ev()
+    r = ev.evaluate({
+        "pOnDemandNodes": np.array([2.0, 0.0, 0.0]),
+        "pSpotNodes": np.array([0.0, 0.0, 0.0]),
+        "spotReclaimRate": np.array([0.0, 0.0, 1e-3]),
+    })
+    # empty fleet and reclaim-without-spot are masked, not silently costed
+    assert r.outputs["valid"].tolist() == [1.0, 0.0, 0.0]
+    assert np.isinf(r.total_cost[1]) and np.isinf(r.total_cost[2])
+    names = list(cloud_space().names)
+    assert names.index("pOnDemandNodes") == 0 and "sloLatency" in names
+
+
+def test_wave_dollars_match_des_dollars_contention_free():
+    # light load, no reclamation: the two backends bill the same window
+    ev = _small_ev(base_rate=0.02, on_demand_price=PRICE, spot_price=0.09)
+    r = ev.evaluate({"pOnDemandNodes": np.array([2.0]),
+                     "pSpotNodes": np.array([2.0])})
+    exact = ev.exact_cost({"pOnDemandNodes": 2, "pSpotNodes": 2})
+    assert np.isclose(float(r.outputs["c_dollarsPerJob"][0]), exact,
+                      rtol=1e-3)
+
+
+def test_cloud_evaluator_through_strategies():
+    from repro.search import (
+        coordinate_descent_ev,
+        grid_search_ev,
+        random_search_ev,
+    )
+
+    ev = _small_ev(slo_target=0.5)
+    space = {"pOnDemandNodes": [1.0, 2.0, 4.0], "pSpotNodes": [0.0, 2.0]}
+    best = grid_search_ev(ev, space)
+    cost, assign = best.best_cost, best.best_assignment
+    assert np.isfinite(cost) and assign["pOnDemandNodes"] >= 1.0
+    r2 = random_search_ev(ev, space, samples=4, seed=0)
+    assert np.isfinite(r2.best_cost)
+    r3 = coordinate_descent_ev(ev, space)
+    assert r3.best_cost <= cost + 1e-9
+    # spot capacity is strictly cheaper here (no reclamation, lower price)
+    full = ev.evaluate({"pOnDemandNodes": np.array([4.0, 2.0]),
+                        "pSpotNodes": np.array([0.0, 2.0])})
+    assert full.total_cost[1] < full.total_cost[0]
+
+
+def test_cloud_evaluator_exact_cost_contract():
+    ev = _small_ev()
+    # invalid assignment resolves to inf, unknown keys raise
+    assert ev.exact_cost({"pOnDemandNodes": 0, "pSpotNodes": 0}) == np.inf
+    with pytest.raises(KeyError):
+        ev.exact_cost({"nope": 1.0})
+    # an unreachable SLO raises the typed ExactCostUnavailable subclass
+    with pytest.raises(SloUnmetError):
+        ev.exact_cost({"pOnDemandNodes": 2, "sloLatency": 1e-6})
+
+
+def test_cloud_evaluator_grad_objective_not_differentiable():
+    from repro.search.evaluator import NotDifferentiableError
+
+    with pytest.raises(NotDifferentiableError):
+        _small_ev().grad_objective()
+
+
+def test_whatif_service_and_api_facade():
+    import repro.api as api
+    from repro.search import WhatIfService
+
+    assert "cloud" in api.available_models()
+    ev = api.get_evaluator("cloud", n_jobs=8, n_seeds=1, chunk=8, sim=CLEAN)
+    assert isinstance(ev, CloudEvaluator)
+    with WhatIfService(ev) as svc:
+        fut = svc.sweep("pOnDemandNodes", [1.0, 2.0, 4.0])
+        res = fut.result(timeout=60)
+    assert np.isfinite(res.total_cost).any()
+    rep = api.sweep(ev, {"pOnDemandNodes": [1.0, 2.0]})
+    assert isinstance(rep, ProvisioningReport)
+    assert np.asarray(rep.dollars_per_job).shape == (2,)
+
+
+def test_provisioning_report_is_a_pytree():
+    ev = _small_ev()
+    rep = ev.report({"pOnDemandNodes": np.array([1.0, 2.0, 4.0])})
+    leaves, treedef = jax.tree_util.tree_flatten(rep)
+    assert len(leaves) == 7
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert np.array_equal(np.asarray(back.dollars_per_job),
+                          np.asarray(rep.dollars_per_job))
+    # cheaper fleets cost less per job; utilization stays a fraction
+    dpj = np.asarray(rep.dollars_per_job)
+    assert dpj[0] < dpj[2]
+    assert np.all((np.asarray(rep.utilization) >= 0)
+                  & (np.asarray(rep.utilization) <= 1.0 + 1e-9))
+
+
+def test_wave_columns_helper():
+    cc = ClusterConfig(num_nodes=4, node_classes=(
+        NodeClass(2, 1.0, 0.10, spot=True), NodeClass(2, 1.0, 0.40)))
+    el = ElasticFleet(policy="queue", max_extra_nodes=2, high_water=1.0,
+                      reclaim_rate=2e-3, billing_quantum=60.0)
+    colsd = wave_columns(el, cc)
+    assert colsd["reclaim_rate"].tolist() == [2e-3, 0.0]
+    assert colsd["autoscale"] == 1.0
+    assert colsd["extra_map_slots"] == 2 * cc.map_slots_per_node
+    assert colsd["billing_quantum"] == 60.0
+    off = wave_columns(ElasticFleet(), cc)
+    assert off["extra_map_slots"] == 0.0 and off["autoscale"] == 0.0
+
+
+# ------------------------------------------------------------- observability
+
+
+def test_destrace_renders_reclaims_and_spend():
+    from repro.obs.destrace import workload_trace
+
+    classes = default_job_classes()
+    tr = rescale(poisson_trace(classes, 8, seed=2), 0.1)
+    cc = ClusterConfig(num_nodes=4, node_classes=(
+        NodeClass(2, 1.0, 0.10, spot=True), NodeClass(2, 1.0, 0.40)))
+    el = ElasticFleet(policy="queue", max_extra_nodes=1, high_water=2.0,
+                      provision_latency=5.0, reclaim_rate=0.05, seed=1)
+    res = simulate_workload(tr, cc, CLEAN, elastic=el)
+    assert res.num_reclaimed > 0
+    tracer = workload_trace(tr, res, cc)
+    evs = tracer.events()
+    instants = {e["name"] for e in evs if e.get("ph") == "i"}
+    assert "reclaim" in instants          # distinct from preempt/failure
+    assert "provisioned" in instants
+    counters = {e["name"] for e in evs if e.get("ph") == "C"}
+    assert "fleet" in counters and "spend" in counters
+    # the spend track is cumulative and ends at the workload's exact bill
+    spend = [e["args"]["dollars"] for e in evs
+             if e.get("ph") == "C" and e["name"] == "spend"]
+    assert spend == sorted(spend)
+    want = bill_workload(res, cc, elastic=el, window=(0.0, res.makespan))
+    assert np.isclose(spend[-1], want, rtol=1e-9)
