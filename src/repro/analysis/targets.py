@@ -25,6 +25,9 @@ Targets:
 * ``cloud-pricing``  — the differentiable dollar path
   (``spot_inflation`` x ``dollars_for``) sensitivity studies descend;
   traced with a concrete zero billing quantum so it stays ceil-free.
+* ``network-model``  — :func:`repro.cluster.network.effective_bandwidth`,
+  the incast-contention factor the job model's topology hook divides
+  Eq. 91's netCost by; differentiable in every topology knob.
 * ``tpu-model``      — **not jaxpr-traceable** (a pure-numpy table model);
   registered with ``traceable=False`` so reports say *why* rather than
   silently skipping a registered model.  Its mask-contract obligations are
@@ -333,6 +336,39 @@ def _build_cloud_rollout():
     return closed, intervals, tuple(names)
 
 
+def _build_network_model():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cluster.network import effective_bandwidth
+
+    fdt = jnp.result_type(float)
+    a = {
+        "pNumRacks": jnp.asarray(4.0, dtype=fdt),
+        "crossRackBw": jnp.asarray(2.0, dtype=fdt),
+        "oversubscription": jnp.asarray(2.0, dtype=fdt),
+        "nFlows": jnp.asarray(8.0, dtype=fdt),
+    }
+    ivals = {
+        "pNumRacks": Interval(1.0, math.inf, False, True),
+        "crossRackBw": Interval(0.0, math.inf, True, True),
+        "oversubscription": Interval(1.0, math.inf, False, True),
+        "nFlows": Interval(0.0, math.inf, False, True),
+    }
+
+    # the effective shuffle bandwidth dividing Eq. 91's netCost in the
+    # closed-form topology hook — the surface pNumRacks / crossRackBw /
+    # oversubscription gradients flow through
+    def fn(arg):
+        return effective_bandwidth(
+            arg["pNumRacks"], arg["crossRackBw"],
+            arg["oversubscription"], arg["nFlows"])
+
+    closed = jax.make_jaxpr(fn)(a)
+    intervals = [ivals[k] for k in sorted(a)]
+    return closed, intervals, ("bandwidth",)
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -380,6 +416,13 @@ def iter_targets() -> list[TraceTarget]:
             doc="the differentiable spot-pricing path (spot_inflation x "
                 "dollars_for), quantum-free so grad stays clean",
             build=_build_cloud_pricing,
+            grad_mode=True,
+        ),
+        TraceTarget(
+            name="network-model",
+            doc="the topology-aware effective shuffle bandwidth dividing "
+                "Eq. 91's netCost (incast contention, differentiable)",
+            build=_build_network_model,
             grad_mode=True,
         ),
         TraceTarget(

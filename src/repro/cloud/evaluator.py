@@ -17,9 +17,11 @@ Override keys (the ``base_cfg`` universe, declared in :func:`cloud_space`):
   spot capacity), ``autoscalePolicy`` / ``autoscaleHighWater`` (the
   :data:`~repro.cloud.autoscaler.AUTOSCALE_POLICIES` code and its
   scale-up trigger), ``sloLatency`` (per-job latency bound the fleet is
-  bought to meet), plus the familiar ``pMaxMapsPerNode``,
-  ``pMaxRedPerNode``, ``pReduceSlowstart``, ``schedPolicy`` and
-  ``arrivalRate`` cluster knobs.
+  bought to meet), ``pNumRacks`` / ``crossRackBw`` / ``oversubscription``
+  (the :class:`repro.cluster.network.Topology` the fleet is wired with —
+  racks=1 or infinite bandwidth is the flat network), plus the familiar
+  ``pMaxMapsPerNode``, ``pMaxRedPerNode``, ``pReduceSlowstart``,
+  ``schedPolicy`` and ``arrivalRate`` cluster knobs.
 
 Cost semantics:
 
@@ -61,6 +63,7 @@ from repro.search.evaluator import (
 from repro.spec import Axis, ParamSpace, Predicate, ProvisioningReport
 
 from repro.cluster.evaluator import UnfinishedWorkloadError
+from repro.cluster.network import Topology
 from repro.cluster.sched import ClusterConfig, NodeClass, simulate_workload
 from repro.cluster.vector_sim import (
     POLICIES,
@@ -113,6 +116,15 @@ def _reclaim_needs_spot(cols: Mapping[str, np.ndarray]) -> np.ndarray:
     return (cols["spotReclaimRate"] <= 0) | (np.round(cols["pSpotNodes"]) > 0)
 
 
+def _racks_fit_fleet(cols: Mapping[str, np.ndarray]) -> np.ndarray:
+    """``pNumRacks <= pOnDemandNodes + pSpotNodes`` — an empty rack is a
+    mis-specified topology, not a bigger fleet."""
+    if ("pNumRacks" not in cols or "pOnDemandNodes" not in cols
+            or "pSpotNodes" not in cols):
+        return np.asarray(True)
+    return cols["pNumRacks"] <= cols["pOnDemandNodes"] + cols["pSpotNodes"]
+
+
 @functools.lru_cache(maxsize=None)
 def cloud_space() -> ParamSpace:
     """The elastic capacity planner's searchable axes.
@@ -153,11 +165,21 @@ def cloud_space() -> ParamSpace:
              group="cloud",
              doc="per-job latency bound; attainment is the fraction of "
                  "jobs at or under it"),
+        Axis("pNumRacks", kind="int", lower=1, group="cloud",
+             doc="racks the fleet is striped across (1 = flat network)"),
+        Axis("crossRackBw", kind="float", lower=0, lower_open=True,
+             unit="x nominal", group="cloud",
+             doc="aggregate core-uplink bandwidth per rack, in units of one "
+                 "flow's nominal rate (inf = never the bottleneck)"),
+        Axis("oversubscription", kind="float", lower=1, group="cloud",
+             doc="top-of-rack oversubscription factor dividing crossRackBw"),
     ], predicates=[
         Predicate("fleet has nodes", _fleet_has_nodes,
                   doc="on-demand + spot node count must be >= 1"),
         Predicate("reclaim rate needs spot capacity", _reclaim_needs_spot,
                   doc="a positive spotReclaimRate requires spot nodes"),
+        Predicate("racks within fleet", _racks_fit_fleet,
+                  doc="at least one node per rack"),
     ])
 
 
@@ -277,6 +299,15 @@ class CloudEvaluator(Evaluator):
             "autoscaleHighWater": jnp.asarray(
                 float(self.elastic.high_water), dtype=fdt),
             "sloLatency": jnp.asarray(float("inf"), dtype=fdt),
+            "pNumRacks": jnp.asarray(
+                float(base.topology.num_racks if base.topology else 1),
+                dtype=fdt),
+            "crossRackBw": jnp.asarray(
+                float(base.topology.cross_rack_bw if base.topology
+                      else float("inf")), dtype=fdt),
+            "oversubscription": jnp.asarray(
+                float(base.topology.oversub if base.topology else 1.0),
+                dtype=fdt),
         }
 
     # ---------------- Evaluator interface ----------------
@@ -337,12 +368,16 @@ class CloudEvaluator(Evaluator):
         xpol = int(round(cfg["autoscalePolicy"]))
         hw = float(cfg["autoscaleHighWater"])
         slo = float(cfg["sloLatency"])
+        racks = int(round(cfg["pNumRacks"]))
+        xbw = float(cfg["crossRackBw"])
+        osub = float(cfg["oversubscription"])
         if (od < 0 or sp < 0 or od + sp < 1 or mpn < 1 or rpn < 1
                 or cfg["arrivalRate"] <= 0
                 or not 0 <= poli < len(POLICIES)
                 or rr < 0 or (rr > 0 and sp == 0)
                 or not 0 <= xpol < len(AUTOSCALE_POLICIES)
-                or hw < 0 or slo <= 0):
+                or hw < 0 or slo <= 0
+                or racks < 1 or racks > od + sp or xbw <= 0 or osub < 1.0):
             return None
         fleet = ()
         if sp > 0:                  # spot first — the wave class-column order
@@ -356,6 +391,8 @@ class CloudEvaluator(Evaluator):
             reduce_slowstart=float(cfg["pReduceSlowstart"]),
             node_classes=fleet,
             capacities=tuple(sorted(self.capacities.items())),
+            topology=Topology(num_racks=racks, cross_rack_bw=xbw,
+                              oversub=osub) if racks > 1 else None,
         )
         el = dataclasses.replace(
             self.elastic, policy=AUTOSCALE_POLICIES[xpol],
@@ -440,6 +477,10 @@ class CloudEvaluator(Evaluator):
         xpol_s = np.clip(xpol, 0.0, float(len(AUTOSCALE_POLICIES) - 1))
         hw_s = np.maximum(hw, 0.0)
         slo_s = np.where(slo > 0, slo, np.inf)
+        racks_s = np.clip(np.round(col("pNumRacks")), 1.0, total_s)
+        xbw = col("crossRackBw")
+        xbw_s = np.where(xbw > 0, xbw, np.inf)
+        osub_s = np.maximum(col("oversubscription"), 1.0)
 
         el = self.elastic
         extra_on = np.where(xpol_s > 0.5, float(el.max_extra_nodes), 0.0)
@@ -475,7 +516,13 @@ class CloudEvaluator(Evaluator):
             "extra_map_slots": rep(extra_on * mpn_s),
             "extra_red_slots": rep(extra_on * rpn_s),
             "billing_quantum": rep(np.full(b, float(el.billing_quantum))),
+            "topo_racks": rep(racks_s),
+            "topo_cross_bw": rep(xbw_s),
+            "topo_oversub": rep(osub_s),
         }
+        if "dep" in cols:
+            scen["dep"] = perjob(cols["dep"])
+            scen["dep_kind"] = perjob(cols["dep_kind"])
         out = simulate_batch(scen, n_steps=estimate_steps(scen),
                              devices=self._devs)
         shp = (b, s)

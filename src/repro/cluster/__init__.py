@@ -8,7 +8,17 @@ contention, and what cluster shape minimizes tail latency?  Three layers:
 * :mod:`~repro.cluster.workload` — job classes over the canonical
   :data:`repro.mapreduce.jobs.JOBS` profiles and arrival traces (Poisson,
   bursty, replayed), generated at unit rate and rescaled so offered load is
-  a searchable knob.
+  a searchable knob; :class:`StageDag` multi-stage (DAG) jobs whose
+  dataflow is derived from the Table-1 identities (stage output bytes size
+  the next stage's mappers), expanded by :func:`dag_trace` into
+  dependency-carrying arrivals and analyzed by :func:`dag_report`
+  (critical path vs makespan, a :class:`repro.spec.DagReport`).
+* :mod:`~repro.cluster.network` — the topology model underneath all of it:
+  :class:`Topology` (racks, per-link bandwidths, oversubscription) with
+  max-min fair-shared shuffle flows for the DES, the differentiable
+  :func:`effective_bandwidth` incast approximation for the wave model and
+  the closed-form job model's topology hook.  ``Topology.flat()`` is
+  bit-for-bit the seed's flat network.
 * :mod:`~repro.cluster.sched` — the multi-job discrete-event simulator:
   FIFO / fair-share / preemptive fair-share / capacity scheduling over
   shared slot pools (kill-and-requeue preemption with a configurable
@@ -31,6 +41,7 @@ contention-free FIFO scenarios and measures scenario throughput;
 """
 
 from .evaluator import ClusterEvaluator, UnfinishedWorkloadError, cluster_space
+from .network import Topology, effective_bandwidth, per_reducer_shuffle
 from .sched import (
     ClusterConfig,
     ClusterTaskRecord,
@@ -49,33 +60,50 @@ from .vector_sim import (
 from .workload import (
     JobArrival,
     JobClass,
+    StageDag,
+    StageEdge,
     WorkloadTrace,
     bursty_trace,
+    dag_from_templates,
+    dag_report,
+    dag_trace,
     default_job_classes,
     poisson_trace,
     replayed_trace,
     rescale,
     shuffle_full,
+    stage_output_bytes,
     task_costs,
 )
+from repro.core.hadoop.simulator import SimConfig
 
 __all__ = [
     "JobClass",
     "JobArrival",
     "WorkloadTrace",
+    "StageDag",
+    "StageEdge",
     "default_job_classes",
+    "dag_from_templates",
+    "dag_trace",
+    "dag_report",
     "poisson_trace",
     "bursty_trace",
     "replayed_trace",
     "rescale",
     "task_costs",
     "shuffle_full",
+    "stage_output_bytes",
     "ClusterConfig",
     "ClusterTaskRecord",
     "JobStats",
     "NodeClass",
+    "SimConfig",
+    "Topology",
     "WorkloadResult",
     "simulate_workload",
+    "effective_bandwidth",
+    "per_reducer_shuffle",
     "POLICIES",
     "pack_trace",
     "estimate_steps",

@@ -30,7 +30,12 @@ Override keys (the ``base_cfg`` universe, declared in :func:`cluster_space`):
   ``schedPolicy`` (0 = fifo, 1 = fair, 2 = fair_preempt, 3 = capacity;
   overrides ``schedFair`` when nonzero), ``preemptTimeout`` (DES grace
   seconds before an over-share kill; the wave model preempts at event
-  boundaries, so this knob only moves ``exact_cost``).
+  boundaries, so this knob only moves ``exact_cost``),
+  ``pNumRacks`` / ``crossRackBw`` / ``oversubscription`` (the network
+  topology of :class:`repro.cluster.network.Topology`: ``pNumRacks=1`` or
+  infinite ``crossRackBw`` is the flat network; otherwise shuffle flows
+  contend for each rack's ``crossRackBw / oversubscription`` uplink —
+  max-min fair-shared in the DES, count-approximated in the wave model).
 """
 
 from __future__ import annotations
@@ -53,6 +58,7 @@ from repro.search.evaluator import (
 )
 from repro.spec import Axis, ParamSpace, Predicate
 
+from .network import Topology
 from .sched import ClusterConfig, NodeClass, simulate_workload
 from .vector_sim import POLICIES, estimate_steps, pack_trace, simulate_batch
 from .workload import JobClass, WorkloadTrace, default_job_classes, poisson_trace, rescale
@@ -77,6 +83,14 @@ def _fast_fits_fleet(cols: Mapping[str, np.ndarray]) -> np.ndarray:
     if "pNumFastNodes" not in cols or "pNumNodes" not in cols:
         return np.asarray(True)
     return cols["pNumFastNodes"] <= cols["pNumNodes"]
+
+
+def _racks_fit_fleet(cols: Mapping[str, np.ndarray]) -> np.ndarray:
+    """``pNumRacks <= pNumNodes`` — an empty rack is a mis-specified
+    topology, not a bigger cluster."""
+    if "pNumRacks" not in cols or "pNumNodes" not in cols:
+        return np.asarray(True)
+    return cols["pNumRacks"] <= cols["pNumNodes"]
 
 
 @functools.lru_cache(maxsize=None)
@@ -118,11 +132,24 @@ def cluster_space() -> ParamSpace:
         Axis("preemptTimeout", kind="float", lower=0, unit="s",
              group="cluster",
              doc="grace before an over-share task is killed (DES only)"),
+        Axis("pNumRacks", kind="int", lower=1, group="cluster",
+             doc="racks the nodes are striped across (1 = flat network)"),
+        Axis("crossRackBw", kind="float", lower=0, lower_open=True,
+             unit="x nominal", group="cluster",
+             doc="aggregate core-uplink bandwidth per rack, in units of one "
+                 "flow's nominal rate (inf = never the bottleneck)"),
+        Axis("oversubscription", kind="float", lower=1, group="cluster",
+             doc="top-of-rack oversubscription factor dividing crossRackBw"),
     ], predicates=[
         Predicate(
             "fast nodes within fleet",
             _fast_fits_fleet,
             doc="the fast class cannot exceed the fleet size",
+        ),
+        Predicate(
+            "racks within fleet",
+            _racks_fit_fleet,
+            doc="at least one node per rack",
         ),
     ])
 
@@ -247,6 +274,15 @@ class ClusterEvaluator(Evaluator):
                 if POLICIES.index(base.scheduler) >= 2 else 0.0, dtype=fdt),
             "preemptTimeout": jnp.asarray(
                 float(base.preempt_timeout), dtype=fdt),
+            "pNumRacks": jnp.asarray(
+                float(base.topology.num_racks if base.topology else 1),
+                dtype=fdt),
+            "crossRackBw": jnp.asarray(
+                float(base.topology.cross_rack_bw if base.topology
+                      else float("inf")), dtype=fdt),
+            "oversubscription": jnp.asarray(
+                float(base.topology.oversub if base.topology else 1.0),
+                dtype=fdt),
         }
 
     # ---------------- Evaluator interface ----------------
@@ -292,17 +328,23 @@ class ClusterEvaluator(Evaluator):
         fast = int(round(cfg["pNumFastNodes"]))
         fspd = float(cfg["fastSpeedup"])
         poli = int(round(cfg["schedPolicy"]))
+        racks = int(round(cfg["pNumRacks"]))
+        xbw = float(cfg["crossRackBw"])
+        osub = float(cfg["oversubscription"])
         if poli == 0 and cfg["schedFair"] > 0.5:
             poli = 1                       # legacy boolean spelling
         if (nodes < 1 or mpn < 1 or rpn < 1 or cfg["arrivalRate"] <= 0
                 or fast < 0 or fast > nodes or fspd < 1.0
                 or not 0 <= poli < len(POLICIES)
-                or cfg["preemptTimeout"] < 0):
+                or cfg["preemptTimeout"] < 0
+                or racks < 1 or racks > nodes or xbw <= 0 or osub < 1.0):
             return None
         fleet = ()
         if fast > 0 and fspd > 1.0:
             fleet = (NodeClass(fast, fspd),) + (
                 (NodeClass(nodes - fast, 1.0),) if nodes > fast else ())
+        topo = Topology(num_racks=racks, cross_rack_bw=xbw, oversub=osub) \
+            if racks > 1 else None
         return ClusterConfig(
             num_nodes=nodes, map_slots_per_node=mpn, reduce_slots_per_node=rpn,
             scheduler=POLICIES[poli],
@@ -310,6 +352,7 @@ class ClusterEvaluator(Evaluator):
             node_classes=fleet,
             preempt_timeout=float(cfg["preemptTimeout"]),
             capacities=tuple(sorted(self.capacities.items())),
+            topology=topo,
         )
 
     def exact_cost(self, assignment: Mapping[str, float]) -> float:
@@ -375,6 +418,12 @@ class ClusterEvaluator(Evaluator):
         fspd_s = np.maximum(fspd, 1.0)
         pol_s = np.clip(pol, 0.0, float(len(POLICIES) - 1))
         base_n = nodes_s - fast_s
+        racks = np.round(col("pNumRacks"))
+        xbw = col("crossRackBw")
+        osub = col("oversubscription")
+        racks_s = np.clip(racks, 1.0, nodes_s)
+        xbw_s = np.where(xbw > 0, xbw, np.inf)
+        osub_s = np.maximum(osub, 1.0)
 
         cols, s = self._cols, len(self.traces)
         rep = lambda a: np.repeat(a[:, None], s, axis=1).reshape(b * s)
@@ -393,7 +442,13 @@ class ClusterEvaluator(Evaluator):
             "slowstart": rep(slow),
             "queue": perjob(self._queue_cols),
             "queue_frac": np.tile(self._queue_fracs, (b, 1)),
+            "topo_racks": rep(racks_s),
+            "topo_cross_bw": rep(xbw_s),
+            "topo_oversub": rep(osub_s),
         }
+        if "dep" in cols:
+            scen["dep"] = perjob(cols["dep"])
+            scen["dep_kind"] = perjob(cols["dep_kind"])
         if np.any(fast_s > 0):
             # two class columns, fastest first: (fast fleet, baseline fleet)
             scen["map_slots"] = rep2(np.stack(

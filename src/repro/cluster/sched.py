@@ -75,6 +75,7 @@ from repro.core.hadoop.params import HadoopParams
 from repro.obs import current as _obs_current
 from repro.obs import percentile_interp
 
+from .network import Topology, flow_rates
 from .workload import WorkloadTrace, task_costs
 
 __all__ = [
@@ -139,6 +140,13 @@ class ClusterConfig:
     node_classes: tuple[NodeClass, ...] = ()
     preempt_timeout: float = 0.0         # grace s before an over-share kill
     capacities: tuple[tuple[str, float], ...] = ()   # class name -> rel. weight
+    #: rack-structured network (:class:`repro.cluster.network.Topology`).
+    #: ``None`` or :meth:`Topology.flat` is the paper's flat pipe: shuffle
+    #: transfers run at the nominal rate with no contention, reproducing
+    #: the pre-topology simulator bit-for-bit (regression-gated).  A
+    #: contended topology schedules each reduce's transfer as a flow and
+    #: max-min fair-shares the links on every flow start/finish.
+    topology: Topology | None = None
 
     def __post_init__(self):
         if self.scheduler not in _SCHEDULERS:
@@ -420,6 +428,85 @@ def simulate_workload(
     by_id = {j.jid: j for j in jobs}
     res = WorkloadResult(jobs=[j.stats for j in jobs], makespan=0.0)
 
+    # ---- DAG dependencies: a job with deps is held until released ----
+    # dep edges ((parent_job_id, "barrier"|"slowstart") on JobArrival.deps)
+    # gate a job's arrival: "barrier" releases when the parent finishes,
+    # "slowstart" when the parent's map phase completes (its reduce wave —
+    # the child's input producer in a pipelined Hive/Pig plan — is already
+    # launched then, mirroring reduce_slowstart's map/shuffle overlap one
+    # level up).  The released job re-arrives at the release time, which
+    # becomes its submit time for queueing/latency accounting.
+    dep_children: dict[int, list[tuple[int, str]]] = {}
+    dep_count: dict[int, int] = {}
+    for a in trace.arrivals:
+        for parent_id, edge_kind in getattr(a, "deps", ()):
+            if edge_kind not in ("barrier", "slowstart"):
+                raise ValueError(f"unknown DAG edge kind: {edge_kind!r}")
+            if parent_id not in by_id or parent_id == a.job_id:
+                raise ValueError(
+                    f"job {a.job_id} depends on unknown job {parent_id}")
+            dep_children.setdefault(parent_id, []).append((a.job_id, edge_kind))
+            dep_count[a.job_id] = dep_count.get(a.job_id, 0) + 1
+    fired_edges: set[tuple[int, int, str]] = set()
+
+    def release_children(parent_jid: int, now: float, edge_kind: str) -> None:
+        for child_jid, k in dep_children.get(parent_jid, ()):
+            if k != edge_kind or (parent_jid, child_jid, k) in fired_edges:
+                continue
+            fired_edges.add((parent_jid, child_jid, k))
+            dep_count[child_jid] -= 1
+            if dep_count[child_jid] == 0:
+                child = by_id[child_jid]
+                t_rel = max(child.submit, now)
+                child.submit = t_rel
+                child.stats.submit_time = t_rel
+                push(t_rel, 1, "arrive", child_jid)
+
+    # ---- topology-aware shuffle (contended racks only) ----
+    # With a contended ClusterConfig.topology every reduce's transfer is a
+    # flow: `flows[uid] = [remaining nominal seconds, dst node, rate]`, and
+    # rates are recomputed as the max-min fair share on every flow start /
+    # finish / kill.  Completion events are invalidated by comparing the
+    # popped time against flow_end (the same lazy-invalidation trick the
+    # rescheduled-reduce guard uses).  Flat/absent topologies never touch
+    # any of this, keeping the seed code paths (and results) bit-for-bit.
+    topo = cluster.topology
+    contended = topo is not None and not topo.is_flat
+    flows: dict[int, list] = {}
+    flow_end: dict[int, float] = {}   # uid -> currently scheduled finish
+    flow_done: dict[int, float] = {}  # uid -> actual transfer finish time
+    flows_at = 0.0                    # clock of the last rate update
+
+    def update_flows(now: float) -> None:
+        nonlocal flows_at
+        dt = now - flows_at
+        if dt > 0.0:
+            for f in flows.values():
+                f[0] = max(f[0] - f[2] * dt, 0.0)
+        flows_at = now
+
+    def reassign_flows(now: float) -> None:
+        rates = flow_rates(topo, [f[1] for f in flows.values()], n_nodes)
+        for (fuid, f), rate in zip(flows.items(), rates):
+            f[2] = rate
+            end = now + f[0] / rate
+            flow_end[fuid] = end
+            push(end, 2, "flow", fuid)
+
+    def start_flow(uid: int, node: int, nominal: float, now: float) -> None:
+        update_flows(now)
+        flows[uid] = [nominal, node, 1.0]
+        reassign_flows(now)
+
+    def drop_flow(uid: int, now: float) -> None:
+        """Forget a killed/finished transfer; survivors speed up."""
+        flow_done.pop(uid, None)
+        if uid in flows:
+            update_flows(now)
+            del flows[uid]
+            flow_end.pop(uid, None)
+            reassign_flows(now)
+
     # capacity queues: one per job-class name; guaranteed share = the
     # class's weight (ClusterConfig.capacities, default 1.0) normalized
     # over the classes present in this trace.
@@ -450,7 +537,8 @@ def simulate_workload(
     for ftime, fnode in sorted(sim.node_failures):
         push(ftime, 0, "fail", fnode)
     for j in jobs:
-        push(j.submit, 1, "arrive", j.jid)
+        if dep_count.get(j.jid, 0) == 0:      # DAG children wait for release
+            push(j.submit, 1, "arrive", j.jid)
     if reclaiming:
         for nd in range(n_base):
             if spot[nd]:
@@ -515,7 +603,12 @@ def simulate_workload(
             reduce_durs[uid] = (sh, wk)
             job.red_copies.setdefault(index, []).append(uid)
             job.running_reds += 1
-            if job.maps_done():
+            if contended and sh > 0.0:
+                # the transfer is a flow on the topology: its completion
+                # arrives via a "flow" event at a fair-share-dependent time
+                running[uid] = (job.jid, kind, index, node, now, _INF, speculative)
+                start_flow(uid, node, sh, now)
+            elif job.maps_done():
                 end = now + sh + wk
                 running[uid] = (job.jid, kind, index, node, now, end, speculative)
                 push(end, 2, "task", uid)
@@ -530,8 +623,11 @@ def simulate_workload(
     def schedule_waiting_reduces(job: _Job, now: float) -> None:
         for uid, (jid, kind, index, node, start, end, spec) in list(running.items()):
             if jid == job.jid and kind == "reduce" and end == _INF:
+                if uid in flows:
+                    continue    # transfer still in flight; its flow event resolves
                 sh, wk = reduce_durs[uid]
-                new_end = max(now, start + sh) + wk
+                sh_done = flow_done[uid] if uid in flow_done else start + sh
+                new_end = max(now, sh_done) + wk
                 running[uid] = (jid, kind, index, node, start, new_end, spec)
                 push(new_end, 2, "task", uid)
 
@@ -737,6 +833,7 @@ def simulate_workload(
             j.running_reds -= 1
             completed, pending = j.completed_reduces, j.pending_reduces
             reduce_durs.pop(uid, None)
+            drop_flow(uid, now)
         res.records.append(
             ClusterTaskRecord(jid, kind, index, node, start, now, spec,
                               killed=True, kill_reason="preempt"))
@@ -788,6 +885,7 @@ def simulate_workload(
             else:
                 j.running_reds -= 1
                 reduce_durs.pop(uid, None)      # killed copy: drop its draws
+                drop_flow(uid, etime)
                 if (index not in j.completed_reduces
                         and index not in j.pending_reduces):
                     j.pending_reduces.append(index)
@@ -821,6 +919,10 @@ def simulate_workload(
     def finish_job(job: _Job, now: float) -> None:
         if job.done() and not job.pending_maps and not job.pending_reduces:
             job.stats.finish = now
+            # slowstart edges release here too (idempotent) so a parent that
+            # never reports a map-phase transition still frees its children
+            release_children(job.jid, now, "slowstart")
+            release_children(job.jid, now, "barrier")
 
     # ---------------- event loop ----------------
 
@@ -897,6 +999,26 @@ def simulate_workload(
                 check_preempt(clock)     # re-arm if still starved
             continue
 
+        if tag == "flow":
+            uid = payload
+            if uid not in flows or flow_end.get(uid) != t:
+                continue                 # flow killed or rates rescheduled it
+            update_flows(t)
+            del flows[uid]
+            flow_end.pop(uid, None)
+            flow_done[uid] = t
+            reassign_flows(clock)        # survivors speed up
+            jid, kind, index, node, start, end, spec = running[uid]
+            job = by_id[jid]
+            if job.maps_done():
+                wk = reduce_durs[uid][1]
+                new_end = t + wk
+                running[uid] = (jid, kind, index, node, start, new_end, spec)
+                push(new_end, 2, "task", uid)
+            # else: still stalled on the map fleet; schedule_waiting_reduces
+            # picks the task up (from flow_done) when the maps land
+            continue
+
         uid = payload
         if uid not in running:
             continue                     # killed or superseded copy
@@ -945,6 +1067,7 @@ def simulate_workload(
             fill_slots(clock)
             if job.maps_done() and not job.pending_maps:
                 schedule_waiting_reduces(job, clock)
+                release_children(job.jid, clock, "slowstart")
             maybe_speculate(clock)
             if job.n_reds == 0:
                 finish_job(job, clock)
@@ -952,6 +1075,7 @@ def simulate_workload(
             red_slots[node] += 1
             job.running_reds -= 1
             reduce_durs.pop(uid, None)
+            flow_done.pop(uid, None)
             if index not in job.completed_reduces:
                 job.completed_reduces.add(index)
                 # stall-free duration (see maybe_speculate)
@@ -965,6 +1089,7 @@ def simulate_workload(
                         red_slots[n2] += 1
                         job.running_reds -= 1
                         reduce_durs.pop(sib, None)
+                        drop_flow(sib, clock)
                         res.records.append(ClusterTaskRecord(
                             jid, k2, i2, n2, s2, clock, sp2, killed=True,
                             kill_reason="superseded"))
@@ -984,6 +1109,8 @@ def simulate_workload(
     assert set(reduce_durs) == {
         u for u, v in running.items() if v[1] == "reduce"
     }, "reduce_durs leaked entries for dead tasks"
+    # flows are reduce transfers in flight: they must not outlive their task
+    assert set(flows) <= set(reduce_durs), "flows leaked entries for dead tasks"
     res.n_unfinished = sum(1 for j in jobs if not np.isfinite(j.stats.finish))
     res.node_busy_s = [0.0] * n_nodes
     for rec in res.records:

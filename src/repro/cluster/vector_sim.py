@@ -52,6 +52,19 @@ classes, Q = capacity queues):
   map_slots (B, C)  red_slots (B, C)  speedup (B, C)
   policy (B,)       slowstart (B,)    queue_frac (B, Q)
 
+**DAG workloads** add ``dep`` / ``dep_kind`` (B, J) columns (default -1 /
+0): job ``j`` arrives once job ``dep[j]`` finishes (kind 0, barrier) or
+finishes its map phase (kind 1, slowstart) — single-parent chains/trees
+only; multi-parent joins go through the DES.  **Topology-aware shuffle**
+adds ``topo_racks`` / ``topo_cross_bw`` / ``topo_oversub`` (B,) columns
+(default 1 / inf / 1): each reduce wave's shuffle term is divided by the
+rack-incast effective bandwidth
+(:func:`repro.cluster.network.effective_bandwidth`) at its launch-time
+concurrent-transfer count.  The bucket keeps its launch-time bandwidth —
+the DES re-fair-shares continuously and is the exact reference, so
+contended-incast agreement is gated at p95 (flat/uncontended rows stay
+rtol-exact, the standard contract).
+
 ``policy`` is 0 = fifo, 1 = fair, 2 = fair_preempt, 3 = capacity (the
 :data:`POLICIES` order).  :func:`simulate_batch` normalizes legacy inputs:
 a ``fair`` (B,) column is accepted as ``policy``, 1-D ``map_slots`` /
@@ -101,6 +114,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.obs import current as _obs_current
 
+from .network import effective_bandwidth
 from .workload import WorkloadTrace, shuffle_full, task_costs
 
 __all__ = ["POLICIES", "latency_quantile", "pack_trace", "estimate_steps",
@@ -121,9 +135,10 @@ def pack_trace(trace: WorkloadTrace) -> dict[str, np.ndarray]:
     ``queue`` is the job's capacity-scheduler queue: the index of its job
     class name in sorted order (the DES's queue enumeration)."""
     cols = {k: [] for k in ("arrival", "n_maps", "n_reds", "map_cost",
-                            "red_work", "shuffle", "queue")}
+                            "red_work", "shuffle", "queue", "dep", "dep_kind")}
     qidx = {name: i for i, name in
             enumerate(sorted({a.klass.name for a in trace.arrivals}))}
+    pos = {a.job_id: i for i, a in enumerate(trace.arrivals)}
     for a in trace.arrivals:
         mc, rc, _ = task_costs(a.klass)
         cols["arrival"].append(a.submit_time)
@@ -133,6 +148,18 @@ def pack_trace(trace: WorkloadTrace) -> dict[str, np.ndarray]:
         cols["red_work"].append(rc)
         cols["shuffle"].append(shuffle_full(a.klass))
         cols["queue"].append(qidx[a.klass.name])
+        # DAG edge columns: index of the (single) parent, or -1; kind 0 =
+        # barrier, 1 = slowstart.  The wave rollout gates arrival on the
+        # parent's finish / map-finish column, which only expresses one
+        # parent per job — joins stay DES territory.
+        deps = a.deps
+        if len(deps) > 1:
+            raise ValueError(
+                "the wave model supports single-parent DAG jobs; route "
+                f"multi-parent job {a.job_id} through the DES")
+        cols["dep"].append(pos[deps[0][0]] if deps else -1)
+        cols["dep_kind"].append(
+            1.0 if deps and deps[0][1] == "slowstart" else 0.0)
     return {k: np.asarray(v, dtype=np.float64) for k, v in cols.items()}
 
 
@@ -155,6 +182,10 @@ def estimate_steps(scen: Mapping[str, np.ndarray], *, margin: float = 2.0
         margin = margin * 2.0
     n_jobs = scen["arrival"].shape[-1]
     est = int(np.max(waves) * margin) + n_jobs + 8
+    if np.any(np.asarray(scen.get("dep", -1.0)) >= 0):
+        # each DAG release costs one zero-advance step (the child arrives
+        # one step after its parent's milestone lands)
+        est += n_jobs
     if (np.any(np.asarray(scen.get("autoscale", 0.0)) > 0.5)
             or np.any(np.asarray(scen.get("extra_map_slots", 0.0)) > 0)):
         # elastic rows add provision/teardown events (the queue policy can
@@ -269,7 +300,8 @@ def latency_quantile(values, q: float):
 
 
 def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
-             with_capacity: bool, with_cloud: bool = False) -> dict:
+             with_capacity: bool, with_cloud: bool = False,
+             with_dag: bool = False, with_topo: bool = False) -> dict:
     arrival = s["arrival"]
     n_maps = s["n_maps"]
     n_reds = s["n_reds"]
@@ -317,6 +349,24 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
         qf = s["queue_frac"]
         onehot = (jnp.round(s["queue"])[:, None]
                   == jnp.arange(qf.shape[0])[None, :]).astype(arrival.dtype)
+    if with_dag:
+        # single-parent DAG edges: job j's arrival is gated on dep[j]'s
+        # finish (barrier) or map-finish (slowstart) column
+        dep = jnp.round(s["dep"]).astype(jnp.int32)
+        dep_slow = s["dep_kind"] > 0.5
+        pidx = jnp.clip(dep, 0, J - 1)
+
+        def eligible_at(map_fin_col, fin_col):
+            parent_t = jnp.where(dep_slow, map_fin_col[pidx], fin_col[pidx])
+            return jnp.maximum(arrival, jnp.where(dep >= 0, parent_t, -_INF))
+    if with_topo:
+        def shuffle_eff(n_flows):
+            # per-rack incast contention: concurrent transfers share the
+            # aggregation downlinks; bw floor keeps the division benign on
+            # degenerate zero-capacity rows (evaluators sanitize earlier)
+            bw = effective_bandwidth(s["topo_racks"], s["topo_cross_bw"],
+                                     s["topo_oversub"], n_flows)
+            return s["shuffle"] / jnp.maximum(bw, 1e-9)
 
     def alloc_free(demand, free_c):
         """Non-preemptive policies: hand the free slots to demand."""
@@ -361,7 +411,13 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
 
     def step(st):
         t = st["t"]
-        arrived = arrival <= t + _EPS
+        if with_dag:
+            # releases land on the previous state's milestones, so a child
+            # released at this instant arrives one (zero-advance) step later
+            eligible = eligible_at(st["map_fin"], st["fin"])
+        else:
+            eligible = arrival
+        arrived = eligible <= t + _EPS
 
         if with_cloud:
             # pending provisioning lands: the block comes online for this
@@ -401,7 +457,14 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
 
         # stalled pre-map-finish reduce wave resolves (the DES rule)
         resolve = just_mf[:, None] & (r_pre > _EPS)
-        e1 = (jnp.maximum(map_fin[:, None], r_pre_start + s["shuffle"][:, None])
+        if with_topo:
+            # contention at resolve time: running + stalled transfers share
+            # the racks (the DES recomputes continuously; this snapshot is
+            # the wave approximation the agreement gate bounds at p95)
+            shuf_res = shuffle_eff((r_run + r_pre).sum())
+        else:
+            shuf_res = s["shuffle"]
+        e1 = (jnp.maximum(map_fin[:, None], r_pre_start + shuf_res[:, None])
               + s["red_work"][:, None] / speedup[None, :])
         r_end = jnp.where(
             resolve,
@@ -474,9 +537,19 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
         launched_r = k_r > _EPS
         post = launched_r & maps_done[:, None]
         pre = launched_r & ~maps_done[:, None]
+        if with_topo:
+            # launch-time contention (this wave's transfers included); the
+            # bucket keeps its launch-time bandwidth for its whole wave
+            shuf_t = shuffle_eff((r_run + r_pre).sum() + k_r.sum())
+            red_dur_t = (shuf_t[:, None]
+                         + s["red_work"][:, None] / speedup[None, :])
+            if with_cloud:
+                red_dur_t = inflate(red_dur_t)
+        else:
+            red_dur_t = red_dur
         r_end = jnp.where(
             post,
-            jnp.maximum(jnp.where(r_run > _EPS, r_end, -_INF), t + red_dur),
+            jnp.maximum(jnp.where(r_run > _EPS, r_end, -_INF), t + red_dur_t),
             r_end)
         r_run = jnp.where(post, r_run + k_r, r_run)
         r_pre = jnp.where(pre, r_pre + k_r, r_pre)
@@ -505,8 +578,14 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
             x_on = jnp.where(drop, 0.0, x_on)
             x_t_on = jnp.where(drop, _INF, x_t_on)
 
+        if with_dag:
+            # re-read eligibility off the UPDATED milestones so a future
+            # release is a scheduled event, not a missed one
+            elig_next = eligible_at(map_fin, fin)
+        else:
+            elig_next = arrival
         t_next = jnp.minimum(
-            jnp.where(arrival > t + _EPS, arrival, _INF).min(),
+            jnp.where(elig_next > t + _EPS, elig_next, _INF).min(),
             jnp.minimum(m_end.min(), r_end.min()))
         if with_cloud:
             t_next = jnp.minimum(t_next, x_at)
@@ -527,7 +606,15 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
     st = jax.lax.while_loop(cont, step, state0)
     converged = jnp.isfinite(st["fin"]).all()
     fin = st["fin"]
-    latency = fin - arrival
+    if with_dag:
+        # a DAG child's service clock starts at its release (the DES sets
+        # submit_time the same way); double-where: an unreleased child has
+        # an infinite release, and inf - inf is the nan this guards against
+        submit = eligible_at(st["map_fin"], st["fin"])
+        sub_safe = jnp.where(jnp.isfinite(submit), submit, 0.0)
+        latency = jnp.where(jnp.isfinite(submit), fin - sub_safe, _INF)
+    else:
+        latency = fin - arrival
     # nominal busy seconds (baseline-speed work estimate over all slots)
     busy = (n_maps * map_cost + n_reds * (s["shuffle"] + s["red_work"])).sum()
     span = jnp.maximum(fin.max() - arrival.min(), 1e-9)
@@ -568,13 +655,14 @@ def _sim_one(s: dict, n_steps: int, with_fair: bool, with_preempt: bool,
 
 @functools.lru_cache(maxsize=32)
 def _compiled(devs: tuple, n_steps: int, with_fair: bool, with_preempt: bool,
-              with_capacity: bool, with_cloud: bool = False):
+              with_capacity: bool, with_cloud: bool = False,
+              with_dag: bool = False, with_topo: bool = False):
     mesh = compat.make_mesh(list(devs), axis="search")
 
     def per_device(scen):
         return jax.vmap(lambda s: _sim_one(
             s, n_steps, with_fair, with_preempt, with_capacity,
-            with_cloud))(scen)
+            with_cloud, with_dag, with_topo))(scen)
 
     return jax.jit(compat.shard_map(
         per_device, mesh=mesh, in_specs=(P("search"),),
@@ -616,6 +704,18 @@ def _normalize(scen: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
     order = np.argsort(-arrs["speedup"], axis=1, kind="stable")
     for k in ("speedup", "map_slots", "red_slots", "reclaim_rate"):
         arrs[k] = np.take_along_axis(arrs[k], order, axis=1)
+    # DAG / topology columns: defaults are the flat no-dependency network,
+    # so legacy batches compile the same lean kernels (flag detection below)
+    if "dep" not in arrs:
+        arrs["dep"] = np.full(arrs["arrival"].shape, -1.0)
+    if "dep_kind" not in arrs:
+        arrs["dep_kind"] = np.zeros(arrs["arrival"].shape, dtype=np.float64)
+    if "topo_racks" not in arrs:
+        arrs["topo_racks"] = np.ones(b, dtype=np.float64)
+    if "topo_cross_bw" not in arrs:
+        arrs["topo_cross_bw"] = np.full(b, np.inf)
+    if "topo_oversub" not in arrs:
+        arrs["topo_oversub"] = np.ones(b, dtype=np.float64)
     if "queue" not in arrs:
         arrs["queue"] = np.zeros_like(arrs["arrival"])
     if "queue_frac" not in arrs:
@@ -666,12 +766,17 @@ def simulate_batch(
                       or np.any(arrs["extra_map_slots"] > 0)
                       or np.any(arrs["extra_red_slots"] > 0)
                       or np.any(arrs["reclaim_rate"] > 0))
+    with_dag = bool(np.any(arrs["dep"] >= 0))
+    with_topo = bool(np.any(
+        (arrs["topo_racks"] > 1.5)
+        & np.isfinite(arrs["topo_cross_bw"]
+                      / np.maximum(arrs["topo_oversub"], 1.0))))
     ob = _obs_current()
     with ob.tracer.span("vector_sim.simulate_batch", scenarios=b,
                         n_steps=n_steps):
         pre = _compiled.cache_info().misses if ob.enabled else 0
         out = _compiled(devs, n_steps, with_fair, with_preempt,
-                        with_capacity, with_cloud)(arrs)
+                        with_capacity, with_cloud, with_dag, with_topo)(arrs)
     if ob.enabled:
         reg = ob.registry
         reg.counter("vector_sim.batches").inc()

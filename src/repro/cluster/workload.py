@@ -26,6 +26,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.cluster.network import per_reducer_shuffle
 from repro.core.hadoop.params import CostFactors, HadoopParams, MiB, ProfileStats
 from repro.core.hadoop.ref import job_model
 from repro.mapreduce.jobs import JOBS
@@ -34,9 +35,15 @@ __all__ = [
     "JobClass",
     "JobArrival",
     "WorkloadTrace",
+    "StageEdge",
+    "StageDag",
     "task_costs",
     "shuffle_full",
+    "stage_output_bytes",
     "default_job_classes",
+    "dag_from_templates",
+    "dag_trace",
+    "dag_report",
     "poisson_trace",
     "bursty_trace",
     "replayed_trace",
@@ -100,7 +107,7 @@ def task_costs(jc: JobClass, *, num_nodes: int | None = None
     jm = _job_model_cached(p, jc.stats, jc.costs)
     map_cost = jm.map.ioCost + jm.map.cpuCost
     red_cost = jm.reduce.ioCost + jm.reduce.cpuCost if p.pNumReducers else 0.0
-    shuffle = jm.netCost / p.pNumReducers if p.pNumReducers else 0.0
+    shuffle = per_reducer_shuffle(jm.netCost, p.pNumReducers)
     return map_cost, red_cost, shuffle
 
 
@@ -123,6 +130,12 @@ class JobArrival:
     job_id: int
     klass: JobClass
     submit_time: float
+    #: DAG edges gating this arrival: ``(parent_job_id, edge_kind)`` pairs,
+    #: ``edge_kind`` in ``{"barrier", "slowstart"}``.  The job is held until
+    #: every parent releases it — at the parent's finish (barrier) or at its
+    #: map-phase completion (slowstart, overlapping the parent's reduce
+    #: wave) — and then arrives at ``max(submit_time, release time)``.
+    deps: tuple[tuple[int, str], ...] = ()
 
 
 @dataclass(frozen=True)
@@ -151,7 +164,7 @@ def rescale(trace: WorkloadTrace, rate: float) -> WorkloadTrace:
     if rate <= 0:
         raise ValueError(f"arrival rate must be positive, got {rate}")
     return WorkloadTrace(tuple(
-        JobArrival(a.job_id, a.klass, a.submit_time / rate)
+        JobArrival(a.job_id, a.klass, a.submit_time / rate, a.deps)
         for a in trace.arrivals
     ))
 
@@ -210,6 +223,204 @@ def default_job_classes(
         out.append(JobClass(name=name, params=p, stats=prof["stats"],
                             costs=c, weight=prof["weight"]))
     return out
+
+
+# --------------------------------------------------------------------------
+# DAG workloads: multi-stage jobs where stage outputs feed stage inputs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StageEdge:
+    """A dependency between two stages of a :class:`StageDag`.
+
+    ``kind="barrier"`` releases the destination stage when the source stage
+    fully finishes (Hive/Pig-style stage boundaries); ``kind="slowstart"``
+    releases it when the source's *map phase* completes, overlapping the
+    destination with the source's reduce wave — the DAG analogue of the
+    paper's ``pSlowstartThreshold`` intra-job overlap.
+    """
+
+    src: int
+    dst: int
+    kind: str = "barrier"
+
+
+@dataclass(frozen=True)
+class StageDag:
+    """A multi-stage job: stages (each a :class:`JobClass`) plus edges.
+
+    Validated on construction: edge endpoints in range, no self-edges, no
+    duplicate edges, acyclic (Kahn).  ``topo_order`` lists stage indices
+    with every stage after all of its parents; ``is_serial`` is True for a
+    width-1 chain — the case where the critical path *is* the makespan.
+    """
+
+    name: str
+    stages: tuple[JobClass, ...]
+    edges: tuple[StageEdge, ...] = ()
+
+    def __post_init__(self):
+        n = len(self.stages)
+        if n == 0:
+            raise ValueError("a StageDag needs at least one stage")
+        seen = set()
+        for e in self.edges:
+            if e.kind not in ("barrier", "slowstart"):
+                raise ValueError(f"unknown edge kind: {e.kind!r}")
+            if not (0 <= e.src < n and 0 <= e.dst < n):
+                raise ValueError(f"edge ({e.src}->{e.dst}) out of range for "
+                                 f"{n} stages")
+            if e.src == e.dst:
+                raise ValueError(f"self-edge on stage {e.src}")
+            if (e.src, e.dst) in seen:
+                raise ValueError(f"duplicate edge ({e.src}->{e.dst})")
+            seen.add((e.src, e.dst))
+        self.topo_order          # raises on cycles
+
+    @property
+    def topo_order(self) -> tuple[int, ...]:
+        n = len(self.stages)
+        indeg = [0] * n
+        children: dict[int, list[int]] = {}
+        for e in self.edges:
+            indeg[e.dst] += 1
+            children.setdefault(e.src, []).append(e.dst)
+        order = [i for i in range(n) if indeg[i] == 0]
+        for i in order:
+            for ch in children.get(i, ()):
+                indeg[ch] -= 1
+                if indeg[ch] == 0:
+                    order.append(ch)
+        if len(order) != n:
+            raise ValueError(f"StageDag {self.name!r} has a cycle")
+        return tuple(order)
+
+    @property
+    def is_serial(self) -> bool:
+        """True for a width-1 chain: n-1 edges, every degree <= 1."""
+        n = len(self.stages)
+        if len(self.edges) != n - 1:
+            return False
+        outd = [0] * n
+        ind = [0] * n
+        for e in self.edges:
+            outd[e.src] += 1
+            ind[e.dst] += 1
+        return max(outd, default=0) <= 1 and max(ind, default=0) <= 1
+
+    def parents_of(self, stage: int) -> tuple[StageEdge, ...]:
+        return tuple(e for e in self.edges if e.dst == stage)
+
+
+def stage_output_bytes(jc: JobClass) -> float:
+    """Final output bytes a stage writes — the next stage's input.
+
+    The Table-1 dataflow identities, job-wide: with reduces the job writes
+    ``outReduceSize * sOutCompressRatio`` per reducer (Eqs. 83 + 86), with
+    a map-only job ``outMapSize * sOutCompressRatio`` per mapper (Eq. 8's
+    compressed write).  Memoized per class via :func:`_job_model_cached`.
+    """
+    p = jc.params
+    jm = _job_model_cached(p, jc.stats, jc.costs)
+    if p.pNumReducers:
+        return float(jm.reduce.outReduceSize * jc.stats.sOutCompressRatio
+                     * p.pNumReducers)
+    return float(jm.map.outMapSize * jc.stats.sOutCompressRatio
+                 * p.pNumMappers)
+
+
+def dag_from_templates(
+    name: str,
+    templates: Sequence[JobClass],
+    edges: Sequence[StageEdge | tuple],
+    *,
+    split_size: float = 64 * MiB,
+) -> StageDag:
+    """Build a :class:`StageDag` whose dataflow is *derived*, not declared.
+
+    Each non-root stage's input is the sum of its parents' final output
+    bytes (:func:`stage_output_bytes`), so its mapper count is rewired to
+    ``max(1, ceil(input_bytes / split_size))`` — exactly how Hadoop sizes a
+    downstream job reading the upstream job's HDFS output.  Stages are
+    processed in topological order so a rewired parent's output feeds its
+    children's sizing.
+    """
+    norm_edges = tuple(e if isinstance(e, StageEdge) else StageEdge(*e)
+                       for e in edges)
+    dag = StageDag(name=name, stages=tuple(templates), edges=norm_edges)
+    stages = list(dag.stages)
+    for i in dag.topo_order:
+        parent_edges = dag.parents_of(i)
+        if not parent_edges:
+            continue
+        in_bytes = sum(stage_output_bytes(stages[e.src]) for e in parent_edges)
+        n_maps = max(1, int(np.ceil(in_bytes / split_size)))
+        jc = stages[i]
+        stages[i] = JobClass(
+            name=jc.name, stats=jc.stats, costs=jc.costs, weight=jc.weight,
+            params=jc.params.replace(pNumMappers=n_maps,
+                                     pSplitSize=split_size),
+        )
+    return StageDag(name=name, stages=tuple(stages), edges=norm_edges)
+
+
+def dag_trace(
+    dag: StageDag,
+    *,
+    n_instances: int = 1,
+    inter_arrival: float = 0.0,
+    submit_time: float = 0.0,
+    job_id_base: int = 0,
+) -> WorkloadTrace:
+    """Expand a :class:`StageDag` into a dependency-carrying trace.
+
+    Each instance contributes ``len(dag.stages)`` arrivals sharing one
+    submit time; non-root stages carry ``deps`` edges so the DES (and,
+    single-parent, the wave model) holds them until their parents release.
+    Stage job-ids follow topological order, so every parent id is lower
+    than its children's — the order :func:`pack_trace` requires.
+    """
+    if n_instances < 1:
+        raise ValueError(f"n_instances must be >= 1, got {n_instances}")
+    order = dag.topo_order
+    arrivals = []
+    jid = job_id_base
+    for inst in range(n_instances):
+        t0 = submit_time + inst * inter_arrival
+        jid_of = {}
+        for stage in order:
+            jid_of[stage] = jid
+            deps = tuple((jid_of[e.src], e.kind)
+                         for e in dag.parents_of(stage))
+            arrivals.append(JobArrival(jid, dag.stages[stage], t0, deps))
+            jid += 1
+    return WorkloadTrace(tuple(arrivals))
+
+
+def dag_report(trace: WorkloadTrace, result):
+    """Critical-path analysis of a simulated DAG trace.
+
+    Pairs the trace's dependency edges with the DES's measured per-stage
+    times and returns a typed :class:`repro.spec.DagReport`.  Defined here
+    (not in ``repro.spec``) so the spec layer stays free of cluster
+    imports; the report itself is a spec pytree.
+    """
+    from repro.spec import DagReport
+
+    jobs = sorted(result.jobs, key=lambda js: js.job_id)
+    idx = {js.job_id: k for k, js in enumerate(jobs)}
+    edges = []
+    for a in trace.arrivals:
+        for parent, kind in a.deps:
+            edges.append((idx[a.job_id], idx[parent], kind))
+    return DagReport.from_times(
+        submit=[js.submit_time for js in jobs],
+        first_launch=[js.first_launch for js in jobs],
+        map_finish=[js.map_finish for js in jobs],
+        finish=[js.finish for js in jobs],
+        edges=edges,
+    )
 
 
 # --------------------------------------------------------------------------

@@ -494,6 +494,26 @@ def job_model_jnp(cfg: dict) -> dict:
     net_size = m["intermDataSize"] * cfg["pNumMappers"] * frac             # Eq. 90
     out["j_netTransferSize"] = jnp.where(has_red, net_size, zero)
     out["j_netCost"] = out["j_netTransferSize"] * cfg["cNetworkCost"]      # Eq. 91
+    if "pNumRacks" in cfg:
+        # topology hook: Eq. 91 priced a flat network; with declared racks
+        # the transfer runs at the incast-contended effective bandwidth of
+        # repro.cluster.network (pNumReducers concurrent flows unless the
+        # caller supplies nFlows).  Deferred import — repro.core cannot
+        # depend on repro.cluster at module scope; network sits below both.
+        from repro.cluster.network import effective_bandwidth
+
+        bw = effective_bandwidth(
+            cfg["pNumRacks"],
+            cfg.get("crossRackBw", jnp.asarray(jnp.inf)),
+            cfg.get("oversubscription", jnp.asarray(1.0)),
+            cfg.get("nFlows", cfg["pNumReducers"]),
+        )
+        # double-where: bw > 0 always (it is clamped to (0, 1]), but a
+        # where-guarded divide keeps the gradient NaN-free at bw -> 0
+        bw_ok = bw > 0.0
+        bw_safe = jnp.where(bw_ok, bw, 1.0)
+        out["j_netCost"] = jnp.where(
+            bw_ok, out["j_netCost"] / bw_safe, out["j_netCost"])
 
     out["j_ioJobCost"] = out["j_ioAllMaps"] + out["j_ioAllReducers"]       # Eq. 96
     out["j_cpuJobCost"] = out["j_cpuAllMaps"] + out["j_cpuAllReducers"]    # Eq. 97

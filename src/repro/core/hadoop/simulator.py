@@ -106,8 +106,13 @@ def simulate_job(
     map_cost = jm.map.ioCost + jm.map.cpuCost
     red_cost = jm.reduce.ioCost + jm.reduce.cpuCost if p.pNumReducers else 0.0
     # Per-reducer share of the network transfer (Eqs. 90-91), serialized per
-    # reducer: each reducer pulls its partition across the network.
-    shuffle_net = jm.netCost / p.pNumReducers if p.pNumReducers else 0.0
+    # reducer: each reducer pulls its partition across the network.  The
+    # import is deferred: repro.core cannot depend on repro.cluster at
+    # module scope (repro.cluster.sched imports this module), but
+    # repro.cluster.network sits below both packages.
+    from repro.cluster.network import per_reducer_shuffle
+
+    shuffle_net = per_reducer_shuffle(jm.netCost, p.pNumReducers)
 
     rng = random.Random(sim.seed)
     res = SimResult(

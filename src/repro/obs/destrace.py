@@ -22,7 +22,14 @@ as Chrome trace events on a **virtual-time** clock (1 simulated second =
 * elastic/priced fleets (:mod:`repro.cloud`) add per-node
   ``provisioned`` / ``offline`` instants at capacity-episode boundaries
   plus ``fleet`` (online nodes) and ``spend`` (cumulative dollars)
-  counter tracks swept from ``WorkloadResult.node_online``.
+  counter tracks swept from ``WorkloadResult.node_online``;
+* DAG traces draw Perfetto flow arrows (``ph: s``/``f``) from each
+  parent's stage boundary (``stage done`` / ``map done`` instant) to the
+  child's ``released`` instant on the jobs lanes — barrier and slowstart
+  edges are labeled by kind;
+* non-flat topologies (``cluster.topology``) add a ``rack uplink util``
+  counter track: per-rack cross-link utilization swept from the reduce
+  records' shuffle spans against the rack's uplink capacity.
 
 Pure host-side post-processing: reads the result's records, touches no jax.
 """
@@ -186,6 +193,65 @@ def workload_trace(trace, result, cluster, *, tracer: Tracer | None = None
                     (js.finish - js.first_launch) * SIM_SECOND_US,
                     pid=_PID_JOBS, tid=tid,
                     n_maps=js.n_maps, n_reduces=js.n_reduces)
+
+    # ---- DAG edges: flow arrows between stage-boundary instants ----
+    stats_of = {js.job_id: js for js in result.jobs}
+    flow_id = 0
+    for a in trace.arrivals:
+        child = stats_of.get(a.job_id)
+        if child is None or child.first_launch == float("inf"):
+            continue
+        for parent_id, kind in a.deps:
+            parent = stats_of.get(parent_id)
+            if parent is None:
+                continue
+            t_rel = parent.map_finish if kind == "slowstart" else parent.finish
+            if t_rel == float("inf"):
+                continue
+            boundary = "map done" if kind == "slowstart" else "stage done"
+            tracer.instant(boundary, ts=t_rel * SIM_SECOND_US,
+                           pid=_PID_JOBS, tid=parent_id,
+                           job=parent_id, edge=kind)
+            tracer.instant("released", ts=child.submit_time * SIM_SECOND_US,
+                           pid=_PID_JOBS, tid=a.job_id,
+                           job=a.job_id, parent=parent_id, edge=kind)
+            flow_id += 1
+            # raw Perfetto flow pair: the arrow from the parent's stage
+            # boundary to the child's release on the jobs lanes
+            tracer.event({"ph": "s", "id": flow_id, "cat": "dag",
+                          "name": kind, "pid": _PID_JOBS, "tid": parent_id,
+                          "ts": t_rel * SIM_SECOND_US})
+            tracer.event({"ph": "f", "bp": "e", "id": flow_id, "cat": "dag",
+                          "name": kind, "pid": _PID_JOBS, "tid": a.job_id,
+                          "ts": child.submit_time * SIM_SECOND_US})
+
+    # ---- per-rack cross-link utilization (topology-aware shuffles) ----
+    topo = getattr(cluster, "topology", None)
+    if topo is not None and not topo.is_flat:
+        # each reduce's [start, shuffle_end] span is a cross-rack flow into
+        # its rack; utilization = fair-share demand / uplink capacity
+        rack_deltas: dict[float, list[float]] = {}
+        for rec in recs:
+            if rec.kind != "reduce" or rec.shuffle_end <= rec.start + 1e-12:
+                continue
+            rack = topo.rack_of(rec.node)
+            d0 = rack_deltas.setdefault(rec.start, [0.0] * topo.num_racks)
+            d1 = rack_deltas.setdefault(rec.shuffle_end,
+                                        [0.0] * topo.num_racks)
+            d0[rack] += 1.0
+            d1[rack] -= 1.0
+        live = [0.0] * topo.num_racks
+        cap = topo.rack_capacity
+        xr = topo.cross_frac
+        for t in sorted(rack_deltas):
+            live = [a + b for a, b in zip(live, rack_deltas[t])]
+            util = {
+                f"rack{r}": (min(1.0, xr * live[r] / cap) if cap > 0
+                             and cap != float("inf") else 0.0)
+                for r in range(topo.num_racks)
+            }
+            tracer.counter("rack uplink util", ts=t * SIM_SECOND_US,
+                           pid=_PID_JOBS, **util)
 
     # ---- running-task counter track (event sweep over live records) ----
     deltas: dict[float, list[int]] = {}

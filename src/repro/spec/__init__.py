@@ -33,6 +33,7 @@ from .report import (
     VALIDITY_CONSTRAINTS,
     CalibrationReport,
     CostReport,
+    DagReport,
     PhaseBreakdown,
     ProvisioningReport,
     invalid_reason_counts,
@@ -48,6 +49,7 @@ __all__ = [
     "PhaseBreakdown",
     "CostReport",
     "CalibrationReport",
+    "DagReport",
     "ProvisioningReport",
     "PHASES",
     "VALIDITY_CONSTRAINTS",

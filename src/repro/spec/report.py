@@ -32,12 +32,14 @@ from dataclasses import dataclass, field, fields
 from typing import Mapping
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "PhaseBreakdown",
     "CostReport",
     "CalibrationReport",
+    "DagReport",
     "ProvisioningReport",
     "PHASES",
     "VALIDITY_CONSTRAINTS",
@@ -272,6 +274,88 @@ class ProvisioningReport:
 
 
 @dataclass(frozen=True)
+class DagReport:
+    """Critical-path decomposition of a measured multi-stage (DAG) run.
+
+    Built from the cluster DES's per-stage times
+    (:func:`repro.cluster.workload.dag_report`).  Every leaf is an array
+    and the class is a registered pytree, like :class:`ProvisioningReport`.
+    ``critical_path_s <= makespan_s`` always (property-tested): the path
+    chains *measured* stage service times through the dependency edges, so
+    scheduling/queueing slack can only add on top of it — equality means a
+    serial (width-1) DAG ran back-to-back, and ``slack_s`` is the headroom
+    a better schedule (or more slots) could recover.
+    """
+
+    critical_path_s: object    # longest dependency-respecting work chain (s)
+    makespan_s: object         # first submit -> last stage finish (s)
+    slack_s: object            # makespan - critical path
+    stage_runtime_s: object    # (n,) measured per-stage service time
+    stage_finish_s: object     # (n,) absolute per-stage finish time
+    critical_stage: object     # index of the stage the critical path ends in
+
+    @classmethod
+    def from_times(cls, submit, first_launch, map_finish, finish, edges
+                   ) -> "DagReport":
+        """Build from measured per-stage times plus dependency edges.
+
+        ``submit`` is each stage's *release* time (the DES overwrites a DAG
+        child's submit with it), ``edges`` is ``(child, parent, kind)``
+        triples with kind ``"barrier"`` or ``"slowstart"``.  The recurrence
+        anchors each stage's measured runtime ``finish - first_launch`` at
+        the latest of its release and its parents' path ends — a slowstart
+        parent hands off at its path end minus its own post-map tail
+        (``finish - map_finish``), since the child only needed the map
+        phase.  Each anchor is ≤ the stage's actual first launch, which is
+        what makes ``critical_path_s <= makespan_s`` an invariant rather
+        than a tendency.
+        """
+        submit = np.asarray(submit, dtype=np.float64)
+        first_launch = np.asarray(first_launch, dtype=np.float64)
+        map_finish = np.asarray(map_finish, dtype=np.float64)
+        finish = np.asarray(finish, dtype=np.float64)
+        n = submit.shape[0]
+        run = finish - first_launch
+        parents: dict[int, list[tuple[int, str]]] = {}
+        children: dict[int, list[int]] = {}
+        indeg = [0] * n
+        for child, parent, kind in edges:
+            parents.setdefault(int(child), []).append((int(parent), kind))
+            children.setdefault(int(parent), []).append(int(child))
+            indeg[int(child)] += 1
+        order = [i for i in range(n) if indeg[i] == 0]
+        for i in order:                       # Kahn: parents precede children
+            for ch in children.get(i, ()):
+                indeg[ch] -= 1
+                if indeg[ch] == 0:
+                    order.append(ch)
+        if len(order) != n:
+            raise ValueError("dependency edges contain a cycle")
+        cp_end = np.zeros(n, dtype=np.float64)
+        for i in order:
+            anchor = submit[i]
+            for parent, kind in parents.get(i, ()):
+                hand = cp_end[parent]
+                if kind == "slowstart":
+                    hand = hand - (finish[parent] - map_finish[parent])
+                anchor = max(anchor, hand)
+            cp_end[i] = anchor + run[i]
+        t0 = submit.min() if n else 0.0
+        span = finish.max() - t0 if n else 0.0
+        cp = cp_end.max() - t0 if n else 0.0
+        if n and not np.isfinite(finish).all():
+            cp = span = float("inf")
+        return cls(
+            critical_path_s=jnp.asarray(cp),
+            makespan_s=jnp.asarray(span),
+            slack_s=jnp.asarray(span - cp if np.isfinite(span) else 0.0),
+            stage_runtime_s=jnp.asarray(run),
+            stage_finish_s=jnp.asarray(finish),
+            critical_stage=jnp.asarray(int(np.argmax(cp_end)) if n else 0),
+        )
+
+
+@dataclass(frozen=True)
 class CalibrationReport:
     """Result of one gradient-calibration run (:mod:`repro.calib`).
 
@@ -385,3 +469,4 @@ def _register_struct(cls):
 _register_struct(PhaseBreakdown)
 _register_struct(CostReport)
 _register_struct(ProvisioningReport)
+_register_struct(DagReport)

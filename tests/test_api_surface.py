@@ -88,6 +88,17 @@ def test_cloud_axis_names_frozen(manifest):
     assert list(cloud_space().names) == manifest["axes"]["cloud"]
 
 
+def test_network_exports_frozen(manifest):
+    import repro.cluster.network as network
+
+    assert sorted(network.__all__) == manifest["repro.cluster.network"], (
+        "repro.cluster.network.__all__ drifted from manifest.json — the "
+        "topology surface is frozen; update the manifest deliberately"
+    )
+    for name in network.__all__:
+        assert getattr(network, name, None) is not None, name
+
+
 def test_registered_backends_cover_the_manifest_spaces(manifest):
     import repro.api as api
 
